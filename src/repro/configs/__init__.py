@@ -1,0 +1,23 @@
+"""Config registry: --arch <id> resolution."""
+from repro.configs.base import ArchConfig, InputShape, INPUT_SHAPES
+
+from repro.configs import (
+    qwen3_8b, qwen15_0p5b, deepseek_coder_33b, gemma3_1b, granite_moe_3b,
+    deepseek_v3_671b, mamba2_2p7b, zamba2_2p7b, seamless_m4t_v2,
+    phi3_vision_4p2b, llama31_8b,
+)
+
+ARCHS: dict[str, ArchConfig] = {
+    m.CONFIG.arch_id: m.CONFIG
+    for m in (qwen3_8b, qwen15_0p5b, deepseek_coder_33b, gemma3_1b,
+              granite_moe_3b, deepseek_v3_671b, mamba2_2p7b, zamba2_2p7b,
+              seamless_m4t_v2, phi3_vision_4p2b, llama31_8b)
+}
+
+ASSIGNED = [a for a in ARCHS if a != "llama3.1-8b"]
+
+
+def get_arch(arch_id: str) -> ArchConfig:
+    if arch_id not in ARCHS:
+        raise KeyError(f"unknown arch {arch_id!r}; known: {sorted(ARCHS)}")
+    return ARCHS[arch_id]

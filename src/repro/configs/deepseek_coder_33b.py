@@ -1,0 +1,8 @@
+"""DeepSeek-Coder-33B [arXiv:2401.14196]: llama-arch dense, GQA kv=8, 62L."""
+from repro.configs.base import ArchConfig
+
+CONFIG = ArchConfig(
+    arch_id="deepseek-coder-33b", family="dense",
+    n_layers=62, d_model=7168, n_heads=56, n_kv_heads=8,
+    d_ff=19200, vocab_size=32256, rope_theta=100000.0,
+)

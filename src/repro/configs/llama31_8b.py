@@ -1,0 +1,10 @@
+"""Llama-3.1-8B — the paper's own primary evaluation model (Table 1/2,
+Fig 7/8). Not part of the assigned pool; included so the benchmarks can
+reproduce the paper's GEMM shapes (N,K) exactly."""
+from repro.configs.base import ArchConfig
+
+CONFIG = ArchConfig(
+    arch_id="llama3.1-8b", family="dense",
+    n_layers=32, d_model=4096, n_heads=32, n_kv_heads=8,
+    d_ff=14336, vocab_size=128256, rope_theta=500000.0,
+)

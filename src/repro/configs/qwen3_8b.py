@@ -1,0 +1,9 @@
+"""Qwen3-8B [hf:Qwen/Qwen3-8B]: dense, GQA kv=8, qk_norm, 36L."""
+from repro.configs.base import ArchConfig
+
+CONFIG = ArchConfig(
+    arch_id="qwen3-8b", family="dense",
+    n_layers=36, d_model=4096, n_heads=32, n_kv_heads=8,
+    d_ff=12288, vocab_size=151936, head_dim=128,
+    qk_norm=True, rope_theta=1_000_000.0,
+)

@@ -1,0 +1,12 @@
+"""SeamlessM4T-Large-v2 [arXiv:2308.11596]: encoder-decoder; the speech
+frontend (mel + conv codec) is a STUB per the assignment carve-out —
+input_specs() supplies precomputed frame embeddings (frontend_dim=1024).
+24 encoder + 24 decoder layers; decoder cross-attends to encoder memory."""
+from repro.configs.base import ArchConfig
+
+CONFIG = ArchConfig(
+    arch_id="seamless-m4t-large-v2", family="encdec",
+    n_layers=24, d_model=1024, n_heads=16, n_kv_heads=16,
+    d_ff=8192, vocab_size=256206,
+    n_enc_layers=24, frontend="audio", frontend_dim=1024,
+)

@@ -1,0 +1,112 @@
+"""NestedLinear: a linear layer readable at two precisions (paper §4).
+
+One weight copy (2 bytes/weight) serves both modes:
+  mode="fp16": lossless path — plain f16 GEMM semantics via the
+               reconstructing kernel (or its ref oracle).
+  mode="fp8":  fast path — per-tensor dynamic absmax activation quant,
+               GEMM on the upper byte, dequant by act_scale * 2^-8.
+Exception tensors (any |w| > 1.75) always run the f16 path, in both modes
+(paper §4.2 "Handling Exception Layers").
+
+The mode is a *traced-time static* argument: the serving engine compiles
+one executable per precision and flips between them per iteration at zero
+weight-copy cost (both executables alias the same buffers).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Literal
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import nestedfp as nf
+from repro.core import quant
+from repro.kernels import ops
+
+Mode = Literal["fp16", "fp8"]
+
+
+@jax.tree_util.register_pytree_node_class
+@dataclasses.dataclass
+class NestedLinearParams:
+    """Weight (K,N) in NestedFP form + optional bias (N,)."""
+    weight: nf.NestedTensor
+    bias: jax.Array | None
+
+    def tree_flatten(self):
+        return (self.weight, self.bias), None
+
+    @classmethod
+    def tree_unflatten(cls, aux, children):
+        return cls(*children)
+
+    @classmethod
+    def create(cls, key, in_features: int, out_features: int,
+               use_bias: bool = False, scale: float | None = None,
+               dtype=jnp.float16) -> "NestedLinearParams":
+        scale = scale if scale is not None else in_features ** -0.5
+        w = (jax.random.normal(key, (in_features, out_features), jnp.float32)
+             * scale).astype(dtype)
+        b = jnp.zeros((out_features,), jnp.float32) if use_bias else None
+        return cls(weight=nf.NestedTensor.from_f16(w), bias=b)
+
+    @classmethod
+    def from_weights(cls, w: jax.Array, bias: jax.Array | None = None
+                     ) -> "NestedLinearParams":
+        return cls(weight=nf.NestedTensor.from_f16(w), bias=bias)
+
+    @property
+    def shape(self):
+        return self.weight.shape
+
+
+def nested_linear(params: NestedLinearParams, x: jax.Array, *,
+                  mode: Mode = "fp16", backend: str | None = None,
+                  out_dtype=None, fast_accum: bool = False) -> jax.Array:
+    """Apply y = x @ W (+ b) at the selected precision.
+
+    x: (..., K). Returns (..., N) in out_dtype (default: x.dtype).
+    fast_accum: bf16 dot outputs => cross-shard partial sums travel in
+    bf16 (halves tensor-parallel all-reduce bytes; serving-only trade).
+    """
+    out_dtype = out_dtype or x.dtype
+    acc = jnp.bfloat16 if fast_accum else jnp.float32
+    w = params.weight
+    if w.is_exception or mode == "fp16":
+        if w.is_exception:
+            y = ops.matmul_f16(x.astype(jnp.float16), w.read_f16(),
+                               backend=backend, out_dtype=acc, acc_dtype=acc)
+        else:
+            y = ops.matmul_nested_f16(x.astype(jnp.float16), w.upper, w.lower,
+                                      backend=backend, out_dtype=acc,
+                                      acc_dtype=acc)
+    elif mode == "fp8":
+        xq, scale = quant.quantize_act_per_tensor(x)
+        y = ops.matmul_nested_fp8(xq, w.upper, scale, backend=backend,
+                                  out_dtype=acc, acc_dtype=acc)
+    else:
+        raise ValueError(f"unknown mode {mode!r}")
+    if params.bias is not None:
+        y = y + params.bias
+    return y.astype(out_dtype)
+
+
+def nest_weight_tree(params, path_filter=None):
+    """Convert every 2-D f16/f32 weight leaf of a pytree into NestedTensor.
+
+    Used by the serving engine to convert a trained checkpoint into
+    serving form. `path_filter(path) -> bool` limits conversion (e.g.
+    exclude embeddings, as the paper quantizes only linear layers).
+    """
+    flat, treedef = jax.tree_util.tree_flatten_with_path(params)
+    out = []
+    for path, leaf in flat:
+        is_mat = hasattr(leaf, "ndim") and leaf.ndim >= 2
+        keep = path_filter(jax.tree_util.keystr(path)) if path_filter else True
+        if is_mat and keep:
+            out.append(nf.NestedTensor.from_f16(jnp.asarray(leaf, jnp.float16)))
+        else:
+            out.append(leaf)
+    return jax.tree_util.tree_unflatten(treedef, out)

@@ -1,0 +1,87 @@
+"""SLO-aware precision controller (paper §3.2, Fig. 1b).
+
+Decides, per serving iteration, whether to run the next step in FP16
+(quality) or FP8 (speed). NestedFP makes the switch free: both modes read
+the same weight buffers, so the decision can follow load at iteration
+granularity — far below the minutes-scale granularity of autoscaling.
+
+The controller is deliberately simple and auditable (the paper's is too):
+it estimates the next iteration's TPOT from a calibrated per-token cost
+model and the current batch, and falls back to FP8 whenever the estimate
+(or the recent measured p90) threatens the SLO. Hysteresis avoids
+oscillation on the boundary.
+"""
+
+from __future__ import annotations
+
+import collections
+import dataclasses
+
+
+@dataclasses.dataclass
+class SLOConfig:
+    ttft_ms: float = 200.0           # industry-standard interactive SLOs
+    tpot_ms: float = 33.3
+    headroom: float = 0.9            # act before the SLO is breached
+    hysteresis_steps: int = 5        # min FP8 dwell before returning to FP16
+    p90_window: int = 64             # measured-latency window
+
+
+@dataclasses.dataclass
+class StepObservation:
+    batch_tokens: int                # tokens in this iteration's batch
+    queue_depth: int                 # requests waiting
+    measured_step_ms: float | None   # wall time of the last step
+
+
+class DualPrecisionController:
+    """Iteration-level FP16/FP8 selector."""
+
+    def __init__(self, slo: SLOConfig, *,
+                 fp16_ms_per_token: float, fp8_ms_per_token: float,
+                 fixed_overhead_ms: float = 2.0):
+        self.slo = slo
+        self.fp16_ms_per_token = fp16_ms_per_token
+        self.fp8_ms_per_token = fp8_ms_per_token
+        self.fixed_overhead_ms = fixed_overhead_ms
+        self._recent = collections.deque(maxlen=slo.p90_window)
+        self._fp8_dwell = 0
+        self.mode: str = "fp16"
+        self.history: list[str] = []
+
+    # -- cost model -----------------------------------------------------------
+    def predict_step_ms(self, batch_tokens: int, mode: str) -> float:
+        per_tok = self.fp16_ms_per_token if mode == "fp16" else self.fp8_ms_per_token
+        return self.fixed_overhead_ms + per_tok * batch_tokens
+
+    def _p90(self) -> float | None:
+        if len(self._recent) < 8:
+            return None
+        s = sorted(self._recent)
+        return s[int(0.9 * (len(s) - 1))]
+
+    # -- decision -------------------------------------------------------------
+    def decide(self, obs: StepObservation) -> str:
+        if obs.measured_step_ms is not None:
+            self._recent.append(obs.measured_step_ms)
+
+        budget = self.slo.tpot_ms * self.slo.headroom
+        pred_fp16 = self.predict_step_ms(obs.batch_tokens, "fp16")
+        p90 = self._p90()
+        overloaded = pred_fp16 > budget or (p90 is not None and p90 > budget)
+
+        if overloaded:
+            self.mode = "fp8"
+            self._fp8_dwell = self.slo.hysteresis_steps
+        elif self.mode == "fp8":
+            self._fp8_dwell -= 1
+            if self._fp8_dwell <= 0:
+                self.mode = "fp16"
+        self.history.append(self.mode)
+        return self.mode
+
+    # -- reporting ------------------------------------------------------------
+    def fp16_time_fraction(self) -> float:
+        if not self.history:
+            return 1.0
+        return self.history.count("fp16") / len(self.history)

@@ -1,0 +1,79 @@
+"""FP8 quantization utilities: activation quant + the paper's FP8 baseline.
+
+The paper's comparison baseline (Table 2, "FP8(B)") is E4M3 with
+per-channel absmax weight scales and per-token absmax activation scales.
+NestedFP8 ("FP8(N)") instead uses ONE global weight scale (2^8) and
+per-tensor absmax activation scales. Both are implemented here so the
+accuracy benchmark can reproduce the Table 2 comparison.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.nestedfp import E4M3_MAX
+
+_EPS = 1e-12
+
+
+def _to_e4m3(x: jax.Array) -> jax.Array:
+    return jnp.clip(x, -E4M3_MAX, E4M3_MAX).astype(jnp.float8_e4m3fn)
+
+
+# -- activations -------------------------------------------------------------
+
+def quantize_act_per_tensor(x: jax.Array) -> tuple[jax.Array, jax.Array]:
+    """Dynamic per-tensor absmax E4M3 quant (NestedFP's activation scheme)."""
+    amax = jnp.maximum(jnp.max(jnp.abs(x.astype(jnp.float32))), _EPS)
+    scale = amax / E4M3_MAX                      # dequant scale
+    q = _to_e4m3(x.astype(jnp.float32) / scale)
+    return q, scale.astype(jnp.float32)
+
+
+def quantize_act_per_token(x: jax.Array) -> tuple[jax.Array, jax.Array]:
+    """Dynamic per-token absmax E4M3 quant (baseline FP8's scheme).
+
+    x: (..., tokens, features); scale per token (broadcast over features).
+    """
+    amax = jnp.maximum(jnp.max(jnp.abs(x.astype(jnp.float32)), axis=-1,
+                               keepdims=True), _EPS)
+    scale = amax / E4M3_MAX
+    q = _to_e4m3(x.astype(jnp.float32) / scale)
+    return q, scale.astype(jnp.float32)
+
+
+# -- weights (baseline only; NestedFP weights come from nestedfp.encode) ------
+
+def quantize_weight_per_channel(w: jax.Array) -> tuple[jax.Array, jax.Array]:
+    """Static per-output-channel absmax E4M3 quant. w: (in, out)."""
+    amax = jnp.maximum(jnp.max(jnp.abs(w.astype(jnp.float32)), axis=0,
+                               keepdims=True), _EPS)
+    scale = amax / E4M3_MAX                      # (1, out)
+    q = _to_e4m3(w.astype(jnp.float32) / scale)
+    return q, scale.astype(jnp.float32)
+
+
+def quantize_weight_per_tensor(w: jax.Array) -> tuple[jax.Array, jax.Array]:
+    amax = jnp.maximum(jnp.max(jnp.abs(w.astype(jnp.float32))), _EPS)
+    scale = amax / E4M3_MAX
+    q = _to_e4m3(w.astype(jnp.float32) / scale)
+    return q, scale.astype(jnp.float32)
+
+
+# -- error metrics (accuracy benchmark, Table 2 proxy) ------------------------
+
+def quant_error_metrics(w: jax.Array, w_hat: jax.Array) -> dict[str, float]:
+    w = w.astype(jnp.float64) if jax.config.jax_enable_x64 else w.astype(jnp.float32)
+    w_hat = w_hat.astype(w.dtype)
+    err = w - w_hat
+    mse = jnp.mean(err * err)
+    sig = jnp.mean(w * w)
+    cos = jnp.sum(w * w_hat) / jnp.maximum(
+        jnp.linalg.norm(w.ravel()) * jnp.linalg.norm(w_hat.ravel()), _EPS)
+    return {
+        "mse": float(mse),
+        "sqnr_db": float(10.0 * jnp.log10(jnp.maximum(sig, _EPS) / jnp.maximum(mse, _EPS))),
+        "cosine": float(cos),
+        "max_abs_err": float(jnp.max(jnp.abs(err))),
+    }

@@ -1,0 +1,7 @@
+from repro.kernels import ops, ref
+from repro.kernels.f16_matmul import f16_matmul
+from repro.kernels.nestedfp16_matmul import nestedfp16_matmul
+from repro.kernels.nestedfp8_matmul import nestedfp8_matmul, nestedfp8_matmul_fused_quant
+from repro.kernels.nestedfp_encode import nestedfp_encode
+from repro.kernels.planar_decode_attention import planar_decode_attention
+from repro.kernels.flash_prefill_attention import flash_prefill_attention

@@ -1,0 +1,129 @@
+"""Jit'd public wrappers around the Pallas kernels.
+
+Responsibilities:
+  * arbitrary-shape support (pad M/N/K up to block multiples, slice back)
+  * backend dispatch:
+      - "pallas":            real TPU lowering (Mosaic)
+      - "pallas_interpret":  kernel body executed in Python on CPU — used
+                             by the correctness sweeps
+      - "ref":               pure-jnp oracle (ref.py). Default on CPU and
+                             inside the 512-device dry-run, where a Mosaic
+                             custom-call cannot lower. The ref path moves
+                             the same bytes and issues the same matmul
+                             FLOPs, so roofline terms are representative.
+  * leading-batch flattening: inputs may be (..., K)
+
+Set repro_backend() or pass backend=... explicitly.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels import ref as _ref
+from repro.kernels.f16_matmul import f16_matmul
+from repro.kernels.nestedfp16_matmul import nestedfp16_matmul
+from repro.kernels.nestedfp8_matmul import nestedfp8_matmul
+
+_DEFAULT_BACKEND = None
+
+
+def default_backend() -> str:
+    global _DEFAULT_BACKEND
+    if _DEFAULT_BACKEND is None:
+        _DEFAULT_BACKEND = ("pallas" if jax.default_backend() == "tpu" else "ref")
+    return _DEFAULT_BACKEND
+
+
+def set_default_backend(name: str) -> None:
+    global _DEFAULT_BACKEND
+    assert name in ("pallas", "pallas_interpret", "ref")
+    _DEFAULT_BACKEND = name
+
+
+def _pad_to(x: jax.Array, mult: int, axis: int) -> jax.Array:
+    size = x.shape[axis]
+    pad = (-size) % mult
+    if pad == 0:
+        return x
+    widths = [(0, 0)] * x.ndim
+    widths[axis] = (0, pad)
+    return jnp.pad(x, widths)
+
+
+def _run_2d(x2d, call_padded, n_out, block):
+    bm, bn, bk = block
+    m = x2d.shape[0]
+    xp = _pad_to(_pad_to(x2d, bm, 0), bk, 1)
+    out = call_padded(xp)
+    return out[:m, :n_out]
+
+
+def matmul_nested_f16(x: jax.Array, upper: jax.Array, lower: jax.Array,
+                      *, backend: str | None = None,
+                      block=(128, 128, 256), out_dtype=jnp.float32,
+                      acc_dtype=jnp.float32) -> jax.Array:
+    """FP16-mode GEMM: x (..., K) @ nested[(K, N)] -> (..., N)."""
+    backend = backend or default_backend()
+    k, n = upper.shape
+    lead = x.shape[:-1]
+    x2d = x.reshape(-1, k)
+    if backend == "ref":
+        out = _ref.nestedfp16_matmul_ref(x2d, upper, lower, acc_dtype=acc_dtype)
+    else:
+        interp = backend == "pallas_interpret"
+        up = _pad_to(_pad_to(upper, block[2], 0), block[1], 1)
+        lp = _pad_to(_pad_to(lower, block[2], 0), block[1], 1)
+        out = _run_2d(
+            x2d,
+            lambda xp: nestedfp16_matmul(xp, up, lp, block=block,
+                                         out_dtype=jnp.float32, interpret=interp),
+            n, block)
+    return out.astype(out_dtype).reshape(*lead, n)
+
+
+def matmul_nested_fp8(x_q: jax.Array, upper: jax.Array, x_scale: jax.Array,
+                      *, backend: str | None = None,
+                      block=(128, 128, 256), out_dtype=jnp.float32,
+                      acc_dtype=jnp.float32) -> jax.Array:
+    """FP8-mode GEMM: x_q (..., K) e4m3 @ upper (K, N) -> (..., N)."""
+    backend = backend or default_backend()
+    k, n = upper.shape
+    lead = x_q.shape[:-1]
+    x2d = x_q.reshape(-1, k)
+    if backend == "ref":
+        out = _ref.nestedfp8_matmul_ref(x2d, upper, x_scale, acc_dtype=acc_dtype)
+    else:
+        interp = backend == "pallas_interpret"
+        up = _pad_to(_pad_to(upper, block[2], 0), block[1], 1)
+        out = _run_2d(
+            x2d,
+            lambda xp: nestedfp8_matmul(xp, up, jnp.atleast_1d(x_scale),
+                                        block=block, out_dtype=jnp.float32,
+                                        interpret=interp),
+            n, block)
+    return out.astype(out_dtype).reshape(*lead, n)
+
+
+def matmul_f16(x: jax.Array, w: jax.Array, *, backend: str | None = None,
+               block=(128, 128, 256), out_dtype=jnp.float32,
+               acc_dtype=jnp.float32) -> jax.Array:
+    """Plain f16 GEMM (exception layers + overhead baseline)."""
+    backend = backend or default_backend()
+    k, n = w.shape
+    lead = x.shape[:-1]
+    x2d = x.reshape(-1, k)
+    if backend == "ref":
+        out = _ref.matmul_f16_ref(x2d, w, acc_dtype=acc_dtype)
+    else:
+        interp = backend == "pallas_interpret"
+        wp = _pad_to(_pad_to(w, block[2], 0), block[1], 1)
+        out = _run_2d(
+            x2d,
+            lambda xp: f16_matmul(xp, wp, block=block,
+                                  out_dtype=jnp.float32, interpret=interp),
+            n, block)
+    return out.astype(out_dtype).reshape(*lead, n)

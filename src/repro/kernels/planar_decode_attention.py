@@ -1,0 +1,134 @@
+"""Pallas TPU kernel: single-token GQA decode attention over a byte-planar
+(NestedKV) cache — the decode_32k hot path identified by the roofline
+(EXPERIMENTS §3.3: cache reads are >95% of decode HBM traffic).
+
+fp8 mode DMAs ONLY the hi planes (1 byte per cached element — half the
+HBM traffic) and treats them as float8_e5m2 truncated values; fp16 mode
+DMAs both planes and rejoins the exact f16 bits in VMEM. Online-softmax
+accumulation across cache blocks (innermost grid dim), masked by per-row
+valid lengths from SMEM.
+
+Grid: (B, Hkv, Cap/block_c). Scratch: running (m, l, acc) per (b, head).
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG_INF = -1e30
+DEFAULT_BLOCK_C = 512
+
+
+def _join(hi, lo):
+    bits = (hi.astype(jnp.uint16) << 8) | lo.astype(jnp.uint16)
+    return jax.lax.bitcast_convert_type(bits, jnp.float16)
+
+
+def _kernel_fp16(q_ref, khi_ref, klo_ref, vhi_ref, vlo_ref, lens_ref,
+                 o_ref, m_ref, l_ref, acc_ref, *, n_blocks, block_c):
+    _attend(q_ref,
+            _join(khi_ref[0, 0], klo_ref[0, 0]),
+            _join(vhi_ref[0, 0], vlo_ref[0, 0]),
+            lens_ref, o_ref, m_ref, l_ref, acc_ref,
+            n_blocks=n_blocks, block_c=block_c)
+
+
+def _kernel_fp8(q_ref, khi_ref, vhi_ref, lens_ref,
+                o_ref, m_ref, l_ref, acc_ref, *, n_blocks, block_c):
+    k = jax.lax.bitcast_convert_type(khi_ref[0, 0], jnp.float8_e5m2)
+    v = jax.lax.bitcast_convert_type(vhi_ref[0, 0], jnp.float8_e5m2)
+    _attend(q_ref, k.astype(jnp.float16), v.astype(jnp.float16),
+            lens_ref, o_ref, m_ref, l_ref, acc_ref,
+            n_blocks=n_blocks, block_c=block_c)
+
+
+def _attend(q_ref, k, v, lens_ref, o_ref, m_ref, l_ref, acc_ref, *,
+            n_blocks, block_c):
+    b = pl.program_id(0)
+    ci = pl.program_id(2)
+
+    @pl.when(ci == 0)
+    def _init():
+        m_ref[...] = jnp.full_like(m_ref, NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    q = q_ref[0, 0]                                  # (G, D)
+    d = q.shape[-1]
+    s = jax.lax.dot_general(                          # (G, block_c)
+        q.astype(jnp.float32) * (d ** -0.5), k.astype(jnp.float32),
+        (((1,), (1,)), ((), ())), preferred_element_type=jnp.float32)
+    kpos = ci * block_c + jax.lax.broadcasted_iota(
+        jnp.int32, s.shape, dimension=1)
+    s = jnp.where(kpos < lens_ref[b], s, NEG_INF)
+
+    m_prev = m_ref[...]                               # (G, 1)
+    m_new = jnp.maximum(m_prev, s.max(axis=-1, keepdims=True))
+    corr = jnp.exp(m_prev - m_new)
+    p = jnp.exp(s - m_new)                            # (G, block_c)
+    l_ref[...] = l_ref[...] * corr + p.sum(axis=-1, keepdims=True)
+    acc_ref[...] = acc_ref[...] * corr + jax.lax.dot_general(
+        p, v.astype(jnp.float32), (((1,), (0,)), ((), ())),
+        preferred_element_type=jnp.float32)
+    m_ref[...] = m_new
+
+    @pl.when(ci == n_blocks - 1)
+    def _flush():
+        o_ref[0, 0] = (acc_ref[...]
+                    / jnp.maximum(l_ref[...], 1e-30)).astype(o_ref.dtype)
+
+
+@functools.partial(jax.jit,
+                   static_argnames=("fp8", "block_c", "interpret"))
+def planar_decode_attention(q, k_hi, k_lo, v_hi, v_lo, lens, *,
+                            fp8: bool = False,
+                            block_c: int = DEFAULT_BLOCK_C,
+                            interpret: bool = False) -> jax.Array:
+    """q: (B, H, D) f16/f32; planes: (B, Cap, Hkv, D) uint8; lens: (B,).
+
+    Returns (B, H, D) f32. Cap must divide block_c (ops-level padding).
+    In fp8 mode only the hi planes are touched."""
+    bsz, h, d = q.shape
+    cap, hkv = k_hi.shape[1], k_hi.shape[2]
+    g = h // hkv
+    assert cap % block_c == 0, (cap, block_c)
+    n_blocks = cap // block_c
+    qg = q.reshape(bsz, hkv, g, d)
+    # planes laid out (B, Hkv, Cap, D) so a (head, cache-block) tile is
+    # contiguous per grid step
+    planes = [p.transpose(0, 2, 1, 3) for p in (k_hi, k_lo, v_hi, v_lo)]
+
+    q_spec = pl.BlockSpec((1, 1, g, d), lambda b, hh, c: (b, hh, 0, 0))
+    c_spec = pl.BlockSpec((1, 1, block_c, d), lambda b, hh, c: (b, hh, c, 0))
+    scratch = [pltpu.VMEM((g, 1), jnp.float32),
+               pltpu.VMEM((g, 1), jnp.float32),
+               pltpu.VMEM((g, d), jnp.float32)]
+    out_spec = pl.BlockSpec((1, 1, g, d), lambda b, hh, c: (b, hh, 0, 0))
+    out_shape = jax.ShapeDtypeStruct((bsz, hkv, g, d), jnp.float32)
+
+    if fp8:
+        out = pl.pallas_call(
+            functools.partial(_kernel_fp8, n_blocks=n_blocks,
+                              block_c=block_c),
+            grid=(bsz, hkv, n_blocks),
+            in_specs=[q_spec, c_spec, c_spec,
+                      pl.BlockSpec(memory_space=pltpu.SMEM)],
+            out_specs=out_spec, out_shape=out_shape,
+            scratch_shapes=scratch, interpret=interpret,
+        )(qg, planes[0], planes[2], lens.astype(jnp.int32))
+    else:
+        out = pl.pallas_call(
+            functools.partial(_kernel_fp16, n_blocks=n_blocks,
+                              block_c=block_c),
+            grid=(bsz, hkv, n_blocks),
+            in_specs=[q_spec, c_spec, c_spec, c_spec, c_spec,
+                      pl.BlockSpec(memory_space=pltpu.SMEM)],
+            out_specs=out_spec, out_shape=out_shape,
+            scratch_shapes=scratch, interpret=interpret,
+        )(qg, *planes, lens.astype(jnp.int32))
+    return out.reshape(bsz, h, d)

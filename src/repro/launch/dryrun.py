@@ -1,0 +1,288 @@
+import os
+os.environ["XLA_FLAGS"] = (os.environ.get("XLA_FLAGS", "") +
+                           " --xla_force_host_platform_device_count=512")
+"""Multi-pod dry-run (deliverable e): lower + compile every
+(architecture × input shape) on the production meshes and extract the
+roofline inputs from the compiled artifact.
+
+MUST keep the two lines above FIRST — jax locks the device count at init.
+
+Usage:
+  python -m repro.launch.dryrun --arch qwen3-8b --shape decode_32k \
+      --mesh single --mode fp16            # one combo, prints + JSON
+  python -m repro.launch.dryrun --all [--mesh both]   # orchestrate all
+      combos, each in a fresh subprocess (resume-safe; skips existing JSON)
+"""
+
+import argparse
+import json
+import subprocess
+import sys
+import time
+import traceback
+
+ART_DIR = os.path.join(os.path.dirname(__file__), "..", "..", "..",
+                       "artifacts", "dryrun")
+
+
+def run_one(arch_id: str, shape_name: str, mesh_kind: str, mode: str,
+            out_dir: str, kv: str = "f16") -> dict:
+    import jax
+    import jax.numpy as jnp
+
+    from repro.configs import get_arch, INPUT_SHAPES
+    from repro.launch import mesh as mesh_lib
+    from repro.launch import sharding as sh
+    from repro.launch import steps
+    from repro.optim import adamw
+    from repro.roofline import analysis as roof
+
+    cfg = get_arch(arch_id)
+    shape = INPUT_SHAPES[shape_name]
+    rec: dict = {"arch": arch_id, "shape": shape_name, "mesh": mesh_kind,
+                 "mode": mode, "kv": kv}
+
+    ok, reason = steps.shape_supported(cfg, shape)
+    if not ok:
+        rec.update({"status": "skipped", "reason": reason})
+        return rec
+
+    mesh = mesh_lib.make_production_mesh(multi_pod=(mesh_kind == "multi"))
+    n_chips = mesh.size
+    data_sz = mesh_lib.data_axis_size(mesh)
+    t0 = time.time()
+
+    if shape.kind == "train":
+        opt_cfg = adamw.AdamWConfig(low_mem=(cfg.arch_id == "deepseek-v3-671b"))
+        params = steps.param_structs(cfg, serving=False)
+        opt = steps.opt_structs(cfg, opt_cfg, params)
+        batch = steps.batch_specs(cfg, shape, data_size=data_sz)
+        p_shard = sh.tree_shardings(params, mesh, sh.param_spec, cfg)
+        o_shard = {"step": sh.scalar_sharding(mesh),
+                   "m": sh.tree_shardings(opt["m"], mesh, sh.opt_state_spec,
+                                          cfg),
+                   "v": sh.tree_shardings(opt["v"], mesh, sh.opt_state_spec,
+                                          cfg)}
+        b_shard = sh.tree_shardings(batch, mesh, sh.batch_spec, cfg, micro=True)
+        fn = steps.make_train_step(cfg, opt_cfg)
+        with jax.set_mesh(mesh):
+            lowered = jax.jit(
+                fn, in_shardings=(p_shard, o_shard, b_shard),
+                out_shardings=(p_shard, o_shard, None),
+                donate_argnums=(0, 1),
+            ).lower(params, opt, batch)
+    elif shape.kind == "prefill":
+        params = steps.param_structs(cfg, serving=True)
+        batch = steps.batch_specs(cfg, shape, data_size=data_sz)
+        p_shard = sh.tree_shardings(params, mesh, sh.param_spec, cfg)
+        b_shard = sh.tree_shardings(batch, mesh, sh.batch_spec, cfg)
+        fn = steps.make_prefill_step(cfg, mode=mode, capacity=shape.seq_len)
+        with jax.set_mesh(mesh):
+            lowered = jax.jit(
+                fn, in_shardings=(p_shard, b_shard),
+            ).lower(params, batch)
+    else:  # decode
+        params = steps.param_structs(cfg, serving=True)
+        caches = steps.cache_structs(cfg, shape, planar=(kv == "planar"))
+        binp = steps.batch_specs(cfg, shape, data_size=data_sz)
+        tokens, cache_len = binp["tokens"], binp["cache_len"]
+        p_shard = sh.tree_shardings(params, mesh, sh.param_spec, cfg)
+        c_shard = sh.tree_shardings(caches, mesh, sh.cache_spec, cfg)
+        t_shard = sh.tree_shardings({"tokens": tokens}, mesh, sh.batch_spec,
+                                    cfg)["tokens"]
+        fn = steps.make_decode_step(cfg, mode=mode)
+        with jax.set_mesh(mesh):
+            lowered = jax.jit(
+                fn, in_shardings=(p_shard, c_shard, t_shard,
+                                  sh.scalar_sharding(mesh)),
+                out_shardings=(None, c_shard),
+                donate_argnums=(1,),
+            ).lower(params, caches, tokens, cache_len)
+
+    rec["lower_s"] = round(time.time() - t0, 2)
+    t1 = time.time()
+    with jax.set_mesh(mesh):
+        compiled = lowered.compile()
+    rec["compile_s"] = round(time.time() - t1, 2)
+
+    # ---- memory analysis (proves it fits) ----
+    ma = compiled.memory_analysis()
+    rec["memory"] = {
+        "argument_gib": ma.argument_size_in_bytes / 2**30,
+        "output_gib": ma.output_size_in_bytes / 2**30,
+        "temp_gib": ma.temp_size_in_bytes / 2**30,
+        "alias_gib": ma.alias_size_in_bytes / 2**30,
+        "peak_gib": (ma.argument_size_in_bytes + ma.output_size_in_bytes
+                     + ma.temp_size_in_bytes - ma.alias_size_in_bytes) / 2**30,
+    }
+    print(f"[memory/device] {json.dumps(rec['memory'])}")
+
+    # ---- cost analysis (per-device; NOTE: XLA counts while bodies once) ----
+    ca = compiled.cost_analysis()
+    ca = ca[0] if isinstance(ca, (list, tuple)) else ca
+    flops_xla = float(ca.get("flops", 0.0))
+    bytes_acc = float(ca.get("bytes accessed", 0.0))
+
+    # exact global FLOPs from the jaxpr (scan trip counts applied)
+    from repro.roofline import flops as fcount
+    if shape.kind == "train":
+        flops_global = fcount.count_step_flops(fn, params, opt, batch)
+        trips = fcount.scan_trip_info(fn, params, opt, batch)
+    elif shape.kind == "prefill":
+        flops_global = fcount.count_step_flops(fn, params, batch)
+        trips = fcount.scan_trip_info(fn, params, batch)
+    else:
+        flops_global = fcount.count_step_flops(fn, params, caches, tokens,
+                                               cache_len)
+        trips = fcount.scan_trip_info(fn, params, caches, tokens, cache_len)
+    flops = flops_global / n_chips
+    rec["cost"] = {"flops_per_device": flops,
+                   "flops_per_device_xla_loops_once": flops_xla,
+                   "flops_global_jaxpr": flops_global,
+                   "bytes_per_device": bytes_acc,
+                   "scan_lengths": trips["scan_lengths"]}
+    print(f"[cost/device] flops={flops:.3e} (xla-once {flops_xla:.3e}) "
+          f"bytes={bytes_acc:.3e}")
+
+    # ---- collectives from optimized HLO (per-depth trip correction) ----
+    coll = roof.collective_bytes(compiled.as_text(),
+                                 trips_by_depth=trips["by_depth"])
+    rec["collectives"] = coll
+
+    # ---- memory traffic: XLA bytes (loops-once) vs resident-buffer bound --
+    resident = (ma.argument_size_in_bytes + ma.output_size_in_bytes
+                + ma.temp_size_in_bytes - ma.alias_size_in_bytes)
+    bytes_est = max(bytes_acc, float(resident))
+    rec["cost"]["bytes_per_device_est"] = bytes_est
+
+    # ---- analytic steady-state HBM traffic (decode rows): the resident
+    # bound cannot credit PARTIAL reads (fp8 reads only `upper` weight
+    # bytes; planar NestedKV reads only hi cache planes), so decode rows
+    # use an analytic term = weights(mode) + cache(mode,format) + writes.
+    if shape.kind == "decode":
+        def _leaf_bytes(leaf):
+            return float(leaf.size) * leaf.dtype.itemsize
+
+        w_read = 0.0
+        for _, leaf in jax.tree_util.tree_flatten_with_path(params)[0]:
+            b = _leaf_bytes(leaf)
+            if leaf.dtype == jnp.uint8 and mode == "fp8":
+                b *= 0.5     # NestedFP pairs: fp8 reads the upper byte only
+            w_read += b
+        c_read = c_write = 0.0
+        for path, leaf in jax.tree_util.tree_flatten_with_path(caches)[0]:
+            keys = "/".join(str(getattr(k, "key", "")) for k in path)
+            b = _leaf_bytes(leaf)
+            if not (mode == "fp8" and "_lo" in keys):   # lo planes unread
+                c_read += b
+            cap_dim = leaf.shape[2] if leaf.ndim >= 3 else 1
+            c_write += b / max(cap_dim, 1)              # one-token write
+        analytic = (w_read + c_read + c_write) / n_chips
+        rec["analytic_traffic"] = {
+            "weights_read_gib": w_read / n_chips / 2**30,
+            "cache_read_gib": c_read / n_chips / 2**30,
+            "cache_write_gib": c_write / n_chips / 2**30,
+            "memory_s_analytic": analytic / roof.HBM_BW,
+        }
+        print(f"[analytic] {json.dumps(rec['analytic_traffic'])}")
+        bytes_est = analytic
+
+    # ---- roofline terms ----
+    terms = roof.roofline_terms(flops, bytes_est,
+                                coll["weighted_wire_bytes"],
+                                fp8=(mode == "fp8"))
+    # count on the training tree: serving trees hold upper+lower byte pairs
+    # for each weight and would double-count
+    pcount = roof.count_params(
+        steps.param_structs(cfg, serving=False),
+        active_expert_fraction=(
+            None if cfg.moe is None else
+            (cfg.moe.top_k + cfg.moe.n_shared_experts) / cfg.moe.n_experts))
+    mf = roof.model_flops(cfg, shape, pcount["active"])
+    terms["model_flops_total"] = mf
+    terms["useful_ratio"] = mf / max(flops * n_chips, 1.0)
+    rec["roofline"] = terms
+    rec["params"] = pcount
+    rec["status"] = "ok"
+    print(f"[roofline] {json.dumps(terms)}")
+    return rec
+
+
+def _combo_path(out_dir, arch, shape, mesh_kind, mode, kv="f16"):
+    suffix = "" if kv == "f16" else f"__{kv}"
+    return os.path.join(out_dir,
+                        f"{arch}__{shape}__{mesh_kind}__{mode}{suffix}.json")
+
+
+def orchestrate(args) -> int:
+    from repro.configs import ASSIGNED, INPUT_SHAPES  # light import
+
+    out_dir = os.path.abspath(args.out)
+    os.makedirs(out_dir, exist_ok=True)
+    meshes = ["single", "multi"] if args.mesh == "both" else [args.mesh]
+    archs = ASSIGNED if args.arch == "all" else [args.arch]
+    shapes = list(INPUT_SHAPES) if args.shape == "all" else [args.shape]
+    failures = []
+    for arch in archs:
+        for shape in shapes:
+            for mk in meshes:
+                path = _combo_path(out_dir, arch, shape, mk, args.mode)
+                if os.path.exists(path) and not args.force:
+                    print(f"skip existing {os.path.basename(path)}")
+                    continue
+                cmd = [sys.executable, "-m", "repro.launch.dryrun",
+                       "--arch", arch, "--shape", shape, "--mesh", mk,
+                       "--mode", args.mode, "--out", out_dir]
+                print(f"--- {arch} {shape} {mk} {args.mode}", flush=True)
+                r = subprocess.run(cmd, timeout=args.timeout)
+                if r.returncode != 0:
+                    failures.append((arch, shape, mk))
+                    print(f"FAILED: {arch} {shape} {mk}")
+    if failures:
+        print("failures:", failures)
+        return 1
+    print("all combos done")
+    return 0
+
+
+def main() -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="all")
+    ap.add_argument("--shape", default="all")
+    ap.add_argument("--mesh", default="single",
+                    choices=["single", "multi", "both"])
+    ap.add_argument("--mode", default="fp16", choices=["fp16", "fp8"])
+    ap.add_argument("--kv", default="f16", choices=["f16", "planar"])
+    ap.add_argument("--out", default=os.path.abspath(ART_DIR))
+    ap.add_argument("--all", action="store_true")
+    ap.add_argument("--force", action="store_true")
+    ap.add_argument("--timeout", type=int, default=3600)
+    args = ap.parse_args()
+
+    if args.all or args.arch == "all" or args.shape == "all" \
+            or args.mesh == "both":
+        return orchestrate(args)
+
+    os.makedirs(args.out, exist_ok=True)
+    path = _combo_path(args.out, args.arch, args.shape, args.mesh, args.mode,
+                       args.kv)
+    try:
+        rec = run_one(args.arch, args.shape, args.mesh, args.mode, args.out,
+                      kv=args.kv)
+    except Exception as e:  # record the failure for the report
+        rec = {"arch": args.arch, "shape": args.shape, "mesh": args.mesh,
+               "mode": args.mode, "status": "error",
+               "error": f"{type(e).__name__}: {e}",
+               "traceback": traceback.format_exc()[-4000:]}
+        with open(path, "w") as f:
+            json.dump(rec, f, indent=1)
+        print(rec["error"])
+        return 1
+    with open(path, "w") as f:
+        json.dump(rec, f, indent=1)
+    print(f"wrote {path}")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -1,0 +1,55 @@
+"""Production mesh builders.
+
+Single pod : (16, 16)    axes (data, model)  — 256 chips (v5e pod)
+Multi-pod  : (2, 16, 16) axes (pod, data, model) — 512 chips; `pod` is an
+             outer data-parallel axis crossing the inter-pod DCN/ICI links.
+
+Defined as functions (not module constants) so importing this module never
+touches jax device state; the dry-run forces 512 host devices BEFORE the
+first jax call (launch/dryrun.py lines 1-2).
+"""
+
+from __future__ import annotations
+
+import jax
+import numpy as np
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    need = int(np.prod(shape))
+    devs = jax.devices()
+    if len(devs) < need:
+        raise RuntimeError(
+            f"mesh {shape} needs {need} devices, have {len(devs)}; the "
+            "dry-run must set XLA_FLAGS=--xla_force_host_platform_device_count"
+            " before any jax import")
+    return jax.make_mesh(
+        shape, axes, devices=devs[:need],
+        axis_types=(jax.sharding.AxisType.Auto,) * len(axes))
+
+
+def make_debug_mesh(data: int = 2, model: int = 2):
+    """Small mesh for sharding unit tests (run in a subprocess with a
+    forced device count)."""
+    need = data * model
+    return jax.make_mesh(
+        (data, model), ("data", "model"), devices=jax.devices()[:need],
+        axis_types=(jax.sharding.AxisType.Auto,) * 2)
+
+
+def data_axes(mesh) -> tuple[str, ...]:
+    """All batch-parallel axes of a mesh (pod folds into data)."""
+    return tuple(a for a in mesh.axis_names if a in ("pod", "data"))
+
+
+def model_axis_size(mesh) -> int:
+    return mesh.shape["model"]
+
+
+def data_axis_size(mesh) -> int:
+    s = 1
+    for a in data_axes(mesh):
+        s *= mesh.shape[a]
+    return s

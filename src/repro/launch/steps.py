@@ -1,0 +1,172 @@
+"""Jit-able step functions + input_specs for every (arch × shape) pair.
+
+  train_4k     -> train_step  (microbatched grad accumulation + AdamW)
+  prefill_32k  -> prefill_step (NestedFP serving params)
+  decode_32k   -> decode_step  (one token, full KV cache)
+  long_500k    -> decode_step  (sub-quadratic archs only; DESIGN.md)
+
+input_specs() returns ShapeDtypeStruct stand-ins for every input — weak-
+type-correct, shardable, never allocated.
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ArchConfig, InputShape
+from repro.data.pipeline import microbatch_split
+from repro.models import model as M
+from repro.models.convert import to_serving
+from repro.models.layers import Runtime
+from repro.optim import adamw
+
+TRAIN_RT = Runtime(mode="train", dtype=jnp.bfloat16)
+
+
+def serve_rt(mode: str) -> Runtime:
+    return Runtime(mode=mode, backend="ref", dtype=jnp.bfloat16,
+                   fast_accum=True)
+
+
+# ---------------------------------------------------------------------------
+# step builders
+# ---------------------------------------------------------------------------
+
+def make_train_step(cfg: ArchConfig, opt_cfg: adamw.AdamWConfig):
+    """(params, opt_state, batch(n_micro, mb, ...)) -> (params, opt, metrics)."""
+
+    def loss_fn(params, mb):
+        return M.train_loss(TRAIN_RT, params, cfg, mb)
+
+    def step(params, opt_state, batch):
+        n_micro = jax.tree_util.tree_leaves(batch)[0].shape[0]
+
+        def mb_body(acc, mb):
+            (loss, metrics), grads = jax.value_and_grad(
+                loss_fn, has_aux=True)(params, mb)
+            acc_g, acc_l = acc
+            acc_g = jax.tree.map(lambda a, g: a + g.astype(a.dtype),
+                                 acc_g, grads)
+            return (acc_g, acc_l + loss), None
+
+        zeros = jax.tree.map(
+            lambda p: jnp.zeros(p.shape, jnp.float32), params)
+        (gsum, lsum), _ = jax.lax.scan(mb_body, (zeros, jnp.float32(0.0)),
+                                       batch)
+        grads = jax.tree.map(lambda g: g / n_micro, gsum)
+        params, opt_state, om = adamw.apply_updates(
+            opt_cfg, params, grads, opt_state)
+        metrics = {"loss": lsum / n_micro, **om}
+        return params, opt_state, metrics
+
+    return step
+
+
+def make_prefill_step(cfg: ArchConfig, mode: str = "fp16",
+                      capacity: int | None = None):
+    rt = serve_rt(mode)
+
+    def step(params, batch):
+        logits, caches, _ = M.prefill(rt, params, cfg, batch,
+                                      capacity=capacity)
+        return logits, caches
+
+    return step
+
+
+def make_decode_step(cfg: ArchConfig, mode: str = "fp16"):
+    rt = serve_rt(mode)
+
+    def step(params, caches, tokens, cache_len):
+        return M.decode_step(rt, params, cfg, tokens, caches, cache_len)
+
+    return step
+
+
+# ---------------------------------------------------------------------------
+# input specs (ShapeDtypeStruct stand-ins, no allocation)
+# ---------------------------------------------------------------------------
+
+def _sds(shape, dtype):
+    return jax.ShapeDtypeStruct(shape, dtype)
+
+
+# §Perf iteration M3 (REFUTED, kept for the record): running small archs'
+# train step without microbatching removes the n_micro multiplier on
+# per-layer collectives — but per-layer collective payloads are
+# TOKEN-proportional, so a 16x bigger batch exactly cancels the 16x fewer
+# trips (measured 54 s -> 53.6 s on granite, with 13x worse memory term).
+# Only the param-proportional per-micro grad all-reduce shrinks. Empty set.
+_SINGLE_SHOT_TRAIN: set[str] = set()
+
+
+def micro_layout(shape: InputShape, data_size: int,
+                 cfg: ArchConfig | None = None) -> tuple[int, int]:
+    """(n_micro, micro_batch). Default: one sample per data shard per
+    micro; small archs run the whole global batch in one shot."""
+    if cfg is not None and cfg.arch_id in _SINGLE_SHOT_TRAIN:
+        return 1, shape.global_batch
+    mb = min(shape.global_batch, data_size)
+    return shape.global_batch // mb, mb
+
+
+def batch_specs(cfg: ArchConfig, shape: InputShape, *,
+                data_size: int = 1) -> dict:
+    """Model-input ShapeDtypeStructs for the given workload shape."""
+    s, b = shape.seq_len, shape.global_batch
+    if shape.kind == "train":
+        n_micro, mb = micro_layout(shape, data_size, cfg)
+        out = {"tokens": _sds((n_micro, mb, s + 1), jnp.int32)}
+        if cfg.frontend == "vision":
+            out["patch_embeds"] = _sds(
+                (n_micro, mb, cfg.frontend_len, cfg.frontend_dim), jnp.bfloat16)
+        if cfg.family == "encdec":
+            out["frames"] = _sds(
+                (n_micro, mb, M.encdec_enc_len(s), cfg.frontend_dim),
+                jnp.bfloat16)
+        return out
+    if shape.kind == "prefill":
+        out = {"tokens": _sds((b, s), jnp.int32)}
+        if cfg.frontend == "vision":
+            out["patch_embeds"] = _sds((b, cfg.frontend_len,
+                                        cfg.frontend_dim), jnp.bfloat16)
+        if cfg.family == "encdec":
+            out["frames"] = _sds((b, M.encdec_enc_len(s), cfg.frontend_dim),
+                                 jnp.bfloat16)
+        return out
+    # decode
+    return {"tokens": _sds((b, 1), jnp.int32),
+            "cache_len": _sds((), jnp.int32)}
+
+
+def param_structs(cfg: ArchConfig, *, serving: bool) -> Any:
+    spec = jax.eval_shape(
+        functools.partial(M.init_params, cfg=cfg), jax.random.PRNGKey(0))
+    if serving:
+        spec = to_serving(spec, structural=True)
+    return spec
+
+
+def opt_structs(cfg: ArchConfig, opt_cfg: adamw.AdamWConfig, params_spec):
+    return jax.eval_shape(
+        functools.partial(adamw.init_state, opt_cfg), params_spec)
+
+
+def cache_structs(cfg: ArchConfig, shape: InputShape,
+                  planar: bool = False) -> Any:
+    return jax.eval_shape(functools.partial(
+        M.init_cache, cfg, shape.global_batch, shape.seq_len,
+        planar=planar))
+
+
+def shape_supported(cfg: ArchConfig, shape: InputShape) -> tuple[bool, str]:
+    """Shape policy (DESIGN.md): long_500k only for sub-quadratic archs."""
+    if shape.name == "long_500k" and not cfg.is_sub_quadratic:
+        return False, ("full-attention arch: 500k dense-cache serving is "
+                       "quadratic at prefill; skipped per DESIGN.md shape "
+                       "policy")
+    return True, ""

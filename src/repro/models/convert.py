@@ -1,0 +1,75 @@
+"""Convert trained params into NestedFP serving params.
+
+Follows the paper's scope: NestedFP applies to *linear layers* (QKV/O,
+MLPs, MoE expert banks, SSM/MLA projections). Embeddings, the LM head,
+MoE routers, norms, convs and other 1-D params stay in their original
+precision ("Quantization is applied exclusively to linear layers, with
+embedding layers left in higher precision", paper §2.2/Table 1 note).
+
+`structural=True` builds the same tree from ShapeDtypeStructs (no data,
+applicability assumed) — used by the dry-run's input_specs().
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.linear import NestedLinearParams
+from repro.core.nestedfp import NestedTensor
+
+# path substrings excluded from nesting
+_EXCLUDE = ("embed", "lm_head", "router", "frontend_proj")
+# 3-D expert-bank / projection leaves nested as whole tensors
+_BANK_KEYS = ("w_gate", "w_up", "w_down")
+
+
+def _is_linear_dict(node) -> bool:
+    return (isinstance(node, dict) and "w" in node
+            and hasattr(node["w"], "ndim") and node["w"].ndim >= 2)
+
+
+def _nest_tensor(arr, structural: bool) -> NestedTensor:
+    if structural:
+        shape, = (arr.shape,)
+        return NestedTensor(
+            upper=jax.ShapeDtypeStruct(shape, jnp.uint8),
+            lower=jax.ShapeDtypeStruct(shape, jnp.uint8),
+            raw=None)
+    return NestedTensor.from_f16(jnp.asarray(arr, jnp.float16))
+
+
+def to_serving(tree, *, structural: bool = False, path: str = ""):
+    """Recursively nest every eligible linear weight."""
+    excluded = any(e in path for e in _EXCLUDE)
+    if isinstance(tree, dict):
+        if _is_linear_dict(tree) and not excluded:
+            return NestedLinearParams(
+                weight=_nest_tensor(tree["w"], structural),
+                bias=tree.get("b"))
+        out = {}
+        for k, v in tree.items():
+            if k in _BANK_KEYS and not excluded and hasattr(v, "ndim"):
+                out[k] = _nest_tensor(v, structural)
+            else:
+                out[k] = to_serving(v, structural=structural,
+                                    path=f"{path}/{k}")
+        return out
+    if isinstance(tree, (list, tuple)):
+        return type(tree)(to_serving(v, structural=structural,
+                                     path=f"{path}[{i}]")
+                          for i, v in enumerate(tree))
+    return tree
+
+
+def serving_memory_bytes(tree) -> dict[str, int]:
+    """Audit: bytes of nested vs. raw leaves (paper's zero-overhead claim)."""
+    nested = raw = 0
+    for leaf in jax.tree_util.tree_leaves(tree):
+        if hasattr(leaf, "nbytes"):
+            if leaf.dtype == jnp.uint8:
+                nested += leaf.nbytes
+            else:
+                raw += leaf.nbytes
+    return {"nested_bytes": nested, "other_bytes": raw,
+            "total_bytes": nested + raw}

@@ -1,0 +1,204 @@
+"""Mamba2 (SSD — state-space duality) block [arXiv:2405.21060].
+
+Chunked SSD algorithm: the sequence is split into chunks of Q tokens;
+within a chunk the (quadratic-in-Q) masked-decay score matrix is applied
+directly, and a lax.scan carries the (H, P, N) recurrent state across
+chunks. Total cost is O(L·Q·H·(N+P)) — sub-quadratic in L, which is what
+qualifies the SSM/hybrid archs for the long_500k shape.
+
+Decode is a single recurrence step on a (B, H, P, N) state + a rolling
+depthwise-conv cache — O(1) per token regardless of context length.
+
+Recurrence (per head h, diag A):
+    S_t = exp(dt_t A) S_{t-1} + dt_t x_t B_t^T        (S: P x N)
+    y_t = C_t S_t^T + D x_t
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.layers import Runtime, apply_linear, init_linear, init_rms_norm, rms_norm
+
+
+def ssm_dims(cfg):
+    s = cfg.ssm
+    d_inner = s.expand * cfg.d_model
+    n_heads = d_inner // s.head_dim
+    conv_ch = d_inner + 2 * s.n_groups * s.d_state
+    return d_inner, n_heads, conv_ch
+
+
+def init_mamba2(key, cfg) -> dict:
+    """Input projections are SEPARATE matrices (z / x / BC / dt) rather
+    than one fused in_proj: a fused output dim sharded over the model axis
+    crosses the z|x|B|C|dt segment boundaries, and GSPMD inserts per-layer
+    resharding collectives at every jnp.split (§Perf iteration Z2 — the
+    split shaved ~1.6 s/step of collectives off zamba2 prefill_32k).
+    x and z shard cleanly over heads; BC and dt are tiny and replicate."""
+    s = cfg.ssm
+    d_inner, n_heads, conv_ch = ssm_dims(cfg)
+    ks = jax.random.split(key, 7)
+    gn = 2 * s.n_groups * s.d_state
+    dt = jnp.exp(jax.random.uniform(ks[2], (n_heads,), jnp.float32)
+                 * (jnp.log(s.dt_max) - jnp.log(s.dt_min)) + jnp.log(s.dt_min))
+    return {
+        "in_z": init_linear(ks[0], cfg.d_model, d_inner),
+        "in_x": init_linear(ks[5], cfg.d_model, d_inner),
+        "in_bc": init_linear(ks[6], cfg.d_model, gn),
+        "in_dt": init_linear(ks[1], cfg.d_model, n_heads),
+        # depthwise convs split per segment (same boundary argument)
+        "conv_wx": (jax.random.normal(ks[1], (s.conv_width, d_inner),
+                                      jnp.float32) * (s.conv_width ** -0.5)),
+        "conv_bx": jnp.zeros((d_inner,), jnp.float32),
+        "conv_wbc": (jax.random.normal(ks[3], (s.conv_width, gn),
+                                       jnp.float32) * (s.conv_width ** -0.5)),
+        "conv_bbc": jnp.zeros((gn,), jnp.float32),
+        "dt_bias": jnp.log(jnp.expm1(dt)),       # softplus^-1(dt)
+        "A_log": jnp.log(jnp.ones((n_heads,), jnp.float32)
+                         + jax.random.uniform(ks[3], (n_heads,))* 15.0),
+        "D": jnp.ones((n_heads,), jnp.float32),
+        "norm": init_rms_norm(d_inner),
+        "out_proj": init_linear(ks[4], d_inner, cfg.d_model),
+    }
+
+
+def _causal_conv(u: jax.Array, w: jax.Array, b: jax.Array,
+                 state: jax.Array | None = None):
+    """Depthwise causal conv via width-W shifted adds.
+
+    u: (B, L, C); w: (W, C); state: (B, W-1, C) rolling cache or None.
+    Returns (out (B,L,C), new_state (B, W-1, C))."""
+    width = w.shape[0]
+    if state is None:
+        state = jnp.zeros((u.shape[0], width - 1, u.shape[2]), u.dtype)
+    full = jnp.concatenate([state, u], axis=1)          # (B, W-1+L, C)
+    out = jnp.zeros_like(u, dtype=jnp.float32)
+    for i in range(width):
+        out = out + full[:, i:i + u.shape[1]].astype(jnp.float32) * w[i]
+    new_state = full[:, -(width - 1):]
+    return jax.nn.silu(out + b).astype(u.dtype), new_state
+
+
+
+
+def ssd_chunked(x, dt, A, B, C, D, *, chunk: int):
+    """Chunked SSD scan.
+
+    x: (b,l,h,p)  dt: (b,l,h)  A: (h,) (negative)  B,C: (b,l,g,n)  D: (h,)
+    returns y: (b,l,h,p), final state (b,h,p,n).
+    """
+    b, l, h, p = x.shape
+    g, n = B.shape[2], B.shape[3]
+    pad = (-l) % chunk
+    if pad:
+        x = jnp.pad(x, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        dt = jnp.pad(dt, ((0, 0), (0, pad), (0, 0)))
+        B = jnp.pad(B, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        C = jnp.pad(C, ((0, 0), (0, pad), (0, 0), (0, 0)))
+    lc = x.shape[1]
+    nc = lc // chunk
+    rep = h // g                                     # heads per B/C group
+
+    xc = x.reshape(b, nc, chunk, h, p)
+    dtc = dt.reshape(b, nc, chunk, h).astype(jnp.float32)
+    Bc = B.reshape(b, nc, chunk, g, n).astype(jnp.float32)
+    Cc = C.reshape(b, nc, chunk, g, n).astype(jnp.float32)
+    Bh = jnp.repeat(Bc, rep, axis=3)                 # (b,nc,q,h,n)
+    Ch = jnp.repeat(Cc, rep, axis=3)
+
+    dA = dtc * A                                     # (b,nc,q,h) negative
+    cum = jnp.cumsum(dA, axis=2)                     # within-chunk cumsum
+
+    # intra-chunk: scores_ij = C_i·B_j * exp(cum_i - cum_j) * dt_j, i >= j
+    decay = jnp.exp(cum[:, :, :, None] - cum[:, :, None])        # (b,nc,q,q,h)
+    mask = jnp.tril(jnp.ones((chunk, chunk), bool))
+    decay = jnp.where(mask[None, None, :, :, None], decay, 0.0)
+    scores = jnp.einsum("bcihn,bcjhn->bcijh", Ch, Bh) * decay * dtc[:, :, None]
+    y = jnp.einsum("bcijh,bcjhp->bcihp", scores,
+                   xc.astype(jnp.float32))
+
+    # chunk summary state: S_c = sum_j exp(cum_last - cum_j) dt_j B_j x_j^T
+    tail = jnp.exp(cum[:, :, -1:, :] - cum) * dtc                # (b,nc,q,h)
+    chunk_states = jnp.einsum("bcjh,bcjhn,bcjhp->bchpn",
+                              tail, Bh, xc.astype(jnp.float32))
+    chunk_decay = jnp.exp(cum[:, :, -1])                         # (b,nc,h)
+
+    def step(S, inp):
+        states_c, decay_c = inp                      # (b,h,p,n), (b,h)
+        S_new = S * decay_c[..., None, None] + states_c
+        return S_new, S                              # emit state BEFORE chunk
+
+    S0 = jnp.zeros((b, h, p, n), jnp.float32)
+    S_final, S_prev = jax.lax.scan(
+        step, S0,
+        (chunk_states.transpose(1, 0, 2, 3, 4), chunk_decay.transpose(1, 0, 2)))
+    S_prev = S_prev.transpose(1, 0, 2, 3, 4)         # (b,nc,h,p,n)
+
+    # inter-chunk contribution: y_i += exp(cum_i) C_i · S_prev
+    y = y + jnp.einsum("bcihn,bchpn->bcihp",
+                       Ch * jnp.exp(cum)[..., None], S_prev)
+    y = y + D[None, None, None, :, None] * xc.astype(jnp.float32)
+    y = y.reshape(b, lc, h, p)[:, :l]
+    return y, S_final
+
+
+def ssd_decode_step(state, x, dt, A, B, C, D):
+    """One-token recurrence. state: (b,h,p,n); x: (b,h,p); dt: (b,h);
+    B,C: (b,g,n). Returns (y (b,h,p), new_state)."""
+    g = B.shape[1]
+    rep = x.shape[1] // g
+    Bh = jnp.repeat(B.astype(jnp.float32), rep, axis=1)    # (b,h,n)
+    Ch = jnp.repeat(C.astype(jnp.float32), rep, axis=1)
+    dtf = dt.astype(jnp.float32)
+    dA = jnp.exp(dtf * A)                                  # (b,h)
+    upd = jnp.einsum("bh,bhp,bhn->bhpn", dtf, x.astype(jnp.float32), Bh)
+    new_state = state * dA[..., None, None] + upd
+    y = jnp.einsum("bhpn,bhn->bhp", new_state, Ch) + D[None, :, None] * x
+    return y.astype(x.dtype), new_state
+
+
+def mamba2_block(rt: Runtime, p: dict, cfg, x: jax.Array, *,
+                 phase: str, cache: dict | None = None):
+    """x: (B, S, D). cache (decode): {"conv": (B,W-1,C), "ssm": (B,H,P,N)}.
+
+    Returns (out, new_cache | None (train) | prefill cache)."""
+    s = cfg.ssm
+    d_inner, n_heads, conv_ch = ssm_dims(cfg)
+    b, seq, _ = x.shape
+
+    z = apply_linear(rt, p["in_z"], x)
+    xp = apply_linear(rt, p["in_x"], x)
+    bc = apply_linear(rt, p["in_bc"], x)
+    dt_raw = apply_linear(rt, p["in_dt"], x)
+    dt = jax.nn.softplus(dt_raw.astype(jnp.float32) + p["dt_bias"])
+    A = -jnp.exp(p["A_log"])
+
+    cx = cache["conv_x"] if cache is not None else None
+    cb = cache["conv_bc"] if cache is not None else None
+    xs, new_cx = _causal_conv(xp, p["conv_wx"], p["conv_bx"], cx)
+    bc_conv, new_cb = _causal_conv(bc, p["conv_wbc"], p["conv_bbc"], cb)
+    gn = s.n_groups * s.d_state
+    B_, C_ = jnp.split(bc_conv, [gn], axis=-1)   # bc_conv: (.., 2*gn)
+    xh = xs.reshape(b, seq, n_heads, s.head_dim)
+    Bm = B_.reshape(b, seq, s.n_groups, s.d_state)
+    Cm = C_.reshape(b, seq, s.n_groups, s.d_state)
+
+    if phase in ("train", "prefill"):
+        y, S_final = ssd_chunked(xh, dt, A, Bm, Cm, p["D"], chunk=s.chunk_size)
+        new_cache = ({"conv_x": new_cx.astype(jnp.float16),
+                      "conv_bc": new_cb.astype(jnp.float16), "ssm": S_final}
+                     if phase == "prefill" else None)
+    else:  # decode: seq == 1
+        y1, S_new = ssd_decode_step(
+            cache["ssm"].astype(jnp.float32), xh[:, 0], dt[:, 0], A,
+            Bm[:, 0], Cm[:, 0], p["D"])
+        y = y1[:, None]
+        new_cache = {"conv_x": new_cx.astype(jnp.float16),
+                     "conv_bc": new_cb.astype(jnp.float16), "ssm": S_new}
+
+    y = y.reshape(b, seq, d_inner).astype(rt.dtype)
+    y = rms_norm(y * jax.nn.silu(z.astype(jnp.float32)).astype(rt.dtype),
+                 p["norm"], cfg.norm_eps)
+    return apply_linear(rt, p["out_proj"], y), new_cache

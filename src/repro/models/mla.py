@@ -1,0 +1,122 @@
+"""Multi-head Latent Attention (DeepSeek-V2/V3) [arXiv:2412.19437].
+
+KV cache stores only the compressed latent c_kv (kv_lora_rank) plus the
+shared RoPE key (qk_rope_dim) per token — 576 f16 values/token for the
+assigned deepseek-v3 config vs 128·256 for vanilla MHA.
+
+Prefill/train materialize per-head K/V from the latent (cheap at O(L));
+decode uses the ABSORBED form: W_uk is folded into the query and W_uv into
+the output so attention runs entirely in the latent space — per-token
+decode cost is H·(r + d_rope) instead of H·L materialization (which would
+be petabytes at 32k cache; see DESIGN.md).
+
+    score_h(t) = (q_nope_h W_uk_h^T) · c_kv[t] + q_rope_h · k_rope[t]
+    ctx_h      = (Σ_t p_t c_kv[t]) W_uv_h
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.layers import (NEG_INF, Runtime, apply_linear, init_linear,
+                                 init_rms_norm, rms_norm, rope,
+                                 attn_core_prefill, attn_core_train)
+
+
+def init_mla(key, cfg) -> dict:
+    m = cfg.mla
+    d, h = cfg.d_model, cfg.n_heads
+    ks = jax.random.split(key, 7)
+    qk_head = m.qk_nope_dim + m.qk_rope_dim
+    return {
+        "wq_a": init_linear(ks[0], d, m.q_lora_rank),
+        "q_norm": init_rms_norm(m.q_lora_rank),
+        "wq_b": init_linear(ks[1], m.q_lora_rank, h * qk_head),
+        "wkv_a": init_linear(ks[2], d, m.kv_lora_rank + m.qk_rope_dim),
+        "kv_norm": init_rms_norm(m.kv_lora_rank),
+        "wk_b": init_linear(ks[3], m.kv_lora_rank, h * m.qk_nope_dim),
+        "wv_b": init_linear(ks[4], m.kv_lora_rank, h * m.v_head_dim),
+        "wo": init_linear(ks[5], h * m.v_head_dim, d),
+    }
+
+
+def _project_q(rt, p, cfg, x, positions):
+    m = cfg.mla
+    b, s, _ = x.shape
+    h = cfg.n_heads
+    q = apply_linear(rt, p["wq_b"],
+                     rms_norm(apply_linear(rt, p["wq_a"], x), p["q_norm"],
+                              cfg.norm_eps))
+    q = q.reshape(b, s, h, m.qk_nope_dim + m.qk_rope_dim)
+    q_nope, q_rope = jnp.split(q, [m.qk_nope_dim], axis=-1)
+    q_rope = rope(q_rope, positions, cfg.rope_theta)
+    return q_nope, q_rope
+
+
+def _project_kv_latent(rt, p, cfg, x, positions):
+    m = cfg.mla
+    kv = apply_linear(rt, p["wkv_a"], x)
+    c_kv, k_rope = jnp.split(kv, [m.kv_lora_rank], axis=-1)
+    c_kv = rms_norm(c_kv, p["kv_norm"], cfg.norm_eps)
+    k_rope = rope(k_rope[:, :, None, :], positions, cfg.rope_theta)[:, :, 0]
+    return c_kv, k_rope       # (B,S,r), (B,S,d_rope)
+
+
+def mla_attention(rt: Runtime, p: dict, cfg, x: jax.Array, *, phase: str,
+                  positions, cache: dict | None = None, kv_len=None):
+    """cache: {"c_kv": (B,Cap,r), "k_rope": (B,Cap,d_rope)}."""
+    m = cfg.mla
+    b, s, _ = x.shape
+    h = cfg.n_heads
+    q_nope, q_rope = _project_q(rt, p, cfg, x, positions)
+
+    if phase in ("train", "prefill"):
+        c_kv, k_rope = _project_kv_latent(rt, p, cfg, x, positions)
+        # materialize per-head K/V from the latent
+        k_nope = apply_linear(rt, p["wk_b"], c_kv).reshape(b, s, h, m.qk_nope_dim)
+        v = apply_linear(rt, p["wv_b"], c_kv).reshape(b, s, h, m.v_head_dim)
+        k_rope_h = jnp.broadcast_to(k_rope[:, :, None, :],
+                                    (b, s, h, m.qk_rope_dim))
+        q_full = jnp.concatenate([q_nope, q_rope], axis=-1)
+        k_full = jnp.concatenate([k_nope, k_rope_h], axis=-1)
+        core = attn_core_train if phase == "train" else attn_core_prefill
+        o = core(q_full, k_full, v)
+        new_cache = ({"c_kv": c_kv, "k_rope": k_rope}
+                     if phase == "prefill" else None)
+    else:  # decode — absorbed latent-space attention
+        from repro.models.layers import _as_lens
+        lens = _as_lens(kv_len, b)
+        rows = jnp.arange(b)
+        c_new, kr_new = _project_kv_latent(rt, p, cfg, x, positions)
+        c_kv = cache["c_kv"].at[rows, lens - 1].set(
+            c_new[:, 0].astype(cache["c_kv"].dtype))
+        k_rope = cache["k_rope"].at[rows, lens - 1].set(
+            kr_new[:, 0].astype(cache["k_rope"].dtype))
+        new_cache = {"c_kv": c_kv, "k_rope": k_rope}
+
+        wk_b = p["wk_b"].weight.read_f16() if hasattr(p["wk_b"], "weight") \
+            else p["wk_b"]["w"]
+        wv_b = p["wv_b"].weight.read_f16() if hasattr(p["wv_b"], "weight") \
+            else p["wv_b"]["w"]
+        wk_b = wk_b.astype(jnp.float32).reshape(m.kv_lora_rank, h, m.qk_nope_dim)
+        wv_b = wv_b.astype(jnp.float32).reshape(m.kv_lora_rank, h, m.v_head_dim)
+
+        # absorb W_uk into q: (B,1,H,r)
+        q_abs = jnp.einsum("bqhd,rhd->bqhr", q_nope.astype(jnp.float32), wk_b)
+        scale = (m.qk_nope_dim + m.qk_rope_dim) ** -0.5
+        s_lat = jnp.einsum("bqhr,bkr->bhqk", q_abs,
+                           c_kv.astype(jnp.float32))
+        s_rope = jnp.einsum("bqhd,bkd->bhqk", q_rope.astype(jnp.float32),
+                            k_rope.astype(jnp.float32))
+        scores = (s_lat + s_rope) * scale
+        cap = c_kv.shape[1]
+        mask = (jnp.arange(cap)[None, None, None, :]
+                < lens[:, None, None, None])
+        scores = jnp.where(mask, scores, NEG_INF)
+        probs = jax.nn.softmax(scores, axis=-1)
+        ctx_lat = jnp.einsum("bhqk,bkr->bqhr", probs, c_kv.astype(jnp.float32))
+        o = jnp.einsum("bqhr,rhd->bqhd", ctx_lat, wv_b)
+
+    o = o.reshape(b, s, h * m.v_head_dim).astype(rt.dtype)
+    return apply_linear(rt, p["wo"], o), new_cache

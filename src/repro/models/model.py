@@ -1,0 +1,622 @@
+"""Top-level model: init / train loss / prefill / decode for all families.
+
+Layer stacks are lax.scan'd over STACKED per-layer params (init via vmap)
+— one compiled block body regardless of depth, which keeps the 80
+dry-run compiles tractable (DESIGN.md §Distribution). Heterogeneity is
+data-driven inside the scan:
+  * gemma3 local/global pattern  -> scanned per-layer `window` array
+    (window <= 0 means global attention)
+  * zamba2 shared attention      -> lax.cond on (layer_idx % attn_every)
+    with the shared block's params closed over; its 9 KV caches ride in
+    the scan carry
+  * deepseek-v3                  -> MLA attention + MoE mlp blocks
+
+Phases: "train" (loss, remat'd blocks), "prefill" (emit KV caches),
+"decode" (one token, fixed-capacity caches).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ArchConfig
+from repro.models import layers as L
+from repro.models import mamba2 as M2
+from repro.models import mla as MLA
+from repro.models import moe as MOE
+from repro.models.layers import Runtime
+
+CACHE_DTYPE = jnp.float16
+
+
+# ---------------------------------------------------------------------------
+# block init / apply (single layer; vmapped + scanned by the stacks)
+# ---------------------------------------------------------------------------
+
+def _attn_kind(cfg: ArchConfig) -> str:
+    return "mla" if cfg.mla is not None else "gqa"
+
+
+def _mlp_kind(cfg: ArchConfig) -> str:
+    return "moe" if cfg.moe is not None else "dense"
+
+
+def init_decoder_block(key, cfg: ArchConfig, *, cross: bool = False) -> dict:
+    ks = jax.random.split(key, 6)
+    p = {"ln1": L.init_rms_norm(cfg.d_model), "ln2": L.init_rms_norm(cfg.d_model)}
+    if _attn_kind(cfg) == "mla":
+        p["attn"] = MLA.init_mla(ks[0], cfg)
+    else:
+        p["attn"] = L.init_attention(ks[0], cfg)
+    if _mlp_kind(cfg) == "moe":
+        p["moe"] = MOE.init_moe(ks[1], cfg)
+    else:
+        p["mlp"] = L.init_swiglu(ks[1], cfg.d_model, cfg.d_ff)
+    if cross:
+        p["ln_cross"] = L.init_rms_norm(cfg.d_model)
+        p["cross"] = L.init_cross_attention(ks[2], cfg)
+    return p
+
+
+def apply_decoder_block(rt: Runtime, p: dict, cfg: ArchConfig, x, *,
+                        phase: str, positions, window=None, cache=None,
+                        kv_len=None, memory=None, cross_cache=None,
+                        causal: bool = True):
+    """Returns (x, new_cache, new_cross_cache, aux)."""
+    aux = {}
+    h = L.rms_norm(x, p["ln1"], cfg.norm_eps)
+    if _attn_kind(cfg) == "mla":
+        a, new_cache = MLA.mla_attention(rt, p["attn"], cfg, h, phase=phase,
+                                         positions=positions, cache=cache,
+                                         kv_len=kv_len)
+    else:
+        a, new_cache = L.attention(rt, p["attn"], cfg, h, phase=phase,
+                                   positions=positions, window=window,
+                                   cache=cache, kv_len=kv_len, causal=causal)
+    x = x + a
+    new_cross = None
+    if "cross" in p:
+        hc = L.rms_norm(x, p["ln_cross"], cfg.norm_eps)
+        c, new_cross = L.cross_attention(rt, p["cross"], cfg, hc, memory,
+                                         cache=cross_cache)
+        x = x + c
+    h = L.rms_norm(x, p["ln2"], cfg.norm_eps)
+    if _mlp_kind(cfg) == "moe":
+        m, aux = MOE.moe_block(rt, p["moe"], cfg, h)
+    else:
+        m = L.swiglu(rt, p["mlp"], h)
+    return x + m, new_cache, new_cross, aux
+
+
+def init_ssm_block(key, cfg: ArchConfig) -> dict:
+    return {"ln1": L.init_rms_norm(cfg.d_model),
+            "mamba": M2.init_mamba2(key, cfg)}
+
+
+def apply_ssm_block(rt: Runtime, p: dict, cfg: ArchConfig, x, *,
+                    phase: str, cache=None):
+    h = L.rms_norm(x, p["ln1"], cfg.norm_eps)
+    y, new_cache = M2.mamba2_block(rt, p["mamba"], cfg, h, phase=phase,
+                                   cache=cache)
+    return x + y, new_cache
+
+
+# ---------------------------------------------------------------------------
+# cache construction
+# ---------------------------------------------------------------------------
+
+def _gqa_cache(cfg, n_layers, b, cap, planar: bool = False):
+    hkv, hd = cfg.n_kv_heads, cfg.resolved_head_dim
+    shp = (n_layers, b, cap, hkv, hd)
+    if planar:   # byte-planar NestedKV (fp8 decode reads hi planes only)
+        return {k: jnp.zeros(shp, jnp.uint8)
+                for k in ("k_hi", "k_lo", "v_hi", "v_lo")}
+    return {"k": jnp.zeros(shp, CACHE_DTYPE), "v": jnp.zeros(shp, CACHE_DTYPE)}
+
+
+def _mla_cache(cfg, n_layers, b, cap):
+    m = cfg.mla
+    return {"c_kv": jnp.zeros((n_layers, b, cap, m.kv_lora_rank), CACHE_DTYPE),
+            "k_rope": jnp.zeros((n_layers, b, cap, m.qk_rope_dim), CACHE_DTYPE)}
+
+
+def _ssm_cache(cfg, n_layers, b):
+    d_inner, n_heads, conv_ch = M2.ssm_dims(cfg)
+    s = cfg.ssm
+    gn2 = 2 * s.n_groups * s.d_state
+    return {
+        "conv_x": jnp.zeros((n_layers, b, s.conv_width - 1, d_inner),
+                            CACHE_DTYPE),
+        "conv_bc": jnp.zeros((n_layers, b, s.conv_width - 1, gn2),
+                             CACHE_DTYPE),
+        "ssm": jnp.zeros((n_layers, b, n_heads, s.head_dim, s.d_state),
+                         jnp.float32),
+    }
+
+
+def init_cache(cfg: ArchConfig, batch: int, capacity: int,
+               planar: bool = False) -> dict:
+    """Decode/prefill cache pytree for one model instance.
+
+    planar=True stores GQA caches as byte planes (NestedKV)."""
+    fam = cfg.family
+    if fam in ("dense", "vlm"):
+        return {"attn": _gqa_cache(cfg, cfg.n_layers, batch, capacity, planar)}
+    if fam == "moe":
+        if cfg.mla is not None:
+            return {"attn": _mla_cache(cfg, cfg.n_layers, batch, capacity)}
+        return {"attn": _gqa_cache(cfg, cfg.n_layers, batch, capacity, planar)}
+    if fam == "ssm":
+        return {"ssm": _ssm_cache(cfg, cfg.n_layers, batch)}
+    if fam == "hybrid":
+        n_apps = cfg.n_layers // cfg.attn_every
+        sh = _gqa_cache(cfg, n_apps, batch, capacity)
+        return {"ssm": _ssm_cache(cfg, cfg.n_layers, batch), "shared": sh}
+    if fam == "encdec":
+        enc_len = encdec_enc_len(capacity)
+        hkv, hd = cfg.n_kv_heads, cfg.resolved_head_dim
+        cross = {"k": jnp.zeros((cfg.n_layers, batch, enc_len, hkv, hd), CACHE_DTYPE),
+                 "v": jnp.zeros((cfg.n_layers, batch, enc_len, hkv, hd), CACHE_DTYPE)}
+        return {"attn": _gqa_cache(cfg, cfg.n_layers, batch, capacity),
+                "cross": cross}
+    raise ValueError(fam)
+
+
+def planarize_cache(caches: dict) -> dict:
+    """Convert prefilled f16 GQA caches ({"k","v"}) into byte-planar form
+    (NestedKV). Applied to the self-attention subtrees only; MLA latents
+    and cross-attention memories keep their formats."""
+    from repro.core.nestedfp import split_bytes
+
+    def conv(sub):
+        if isinstance(sub, dict) and set(sub) == {"k", "v"}:
+            k_hi, k_lo = split_bytes(sub["k"])
+            v_hi, v_lo = split_bytes(sub["v"])
+            return {"k_hi": k_hi, "k_lo": k_lo, "v_hi": v_hi, "v_lo": v_lo}
+        return sub
+
+    out = dict(caches)
+    for key in ("attn", "shared"):
+        if key in out:
+            out[key] = conv(out[key])
+    return out
+
+
+def encdec_enc_len(dec_len: int) -> int:
+    """Encoder (audio-frame) length policy for seamless: seq//8, min 64."""
+    return max(64, dec_len // 8)
+
+
+# ---------------------------------------------------------------------------
+# whole-model params
+# ---------------------------------------------------------------------------
+
+def _stack_init(key, n: int, fn):
+    return jax.vmap(fn)(jax.random.split(key, n))
+
+
+def window_schedule(cfg: ArchConfig) -> jnp.ndarray | None:
+    """Per-layer window array: gemma3 5:1 pattern — every swa_pattern-th
+    layer is global (-1), the rest local (sliding_window)."""
+    if cfg.sliding_window is None:
+        return None
+    idx = jnp.arange(cfg.n_layers)
+    is_global = (idx % cfg.swa_pattern) == (cfg.swa_pattern - 1)
+    return jnp.where(is_global, -1, cfg.sliding_window).astype(jnp.int32)
+
+
+def init_params(key, cfg: ArchConfig) -> dict:
+    ks = jax.random.split(key, 10)
+    d = cfg.d_model
+    params: dict[str, Any] = {
+        "embed": {"tok": (jax.random.normal(ks[0], (cfg.vocab_size, d),
+                                            jnp.float32) * 0.02)},
+        "final_norm": L.init_rms_norm(d),
+    }
+    if not cfg.tie_embeddings:
+        params["lm_head"] = L.init_linear(ks[1], d, cfg.vocab_size)
+
+    fam = cfg.family
+    if fam in ("dense", "moe", "vlm"):
+        params["layers"] = _stack_init(
+            ks[2], cfg.n_layers, lambda k: init_decoder_block(k, cfg))
+    elif fam == "ssm":
+        params["layers"] = _stack_init(
+            ks[2], cfg.n_layers, lambda k: init_ssm_block(k, cfg))
+    elif fam == "hybrid":
+        params["layers"] = _stack_init(
+            ks[2], cfg.n_layers, lambda k: init_ssm_block(k, cfg))
+        params["shared_attn"] = init_decoder_block(ks[3], cfg)
+    elif fam == "encdec":
+        params["enc_layers"] = _stack_init(
+            ks[2], cfg.n_enc_layers, lambda k: init_decoder_block(k, cfg))
+        params["layers"] = _stack_init(
+            ks[3], cfg.n_layers, lambda k: init_decoder_block(k, cfg, cross=True))
+        params["enc_norm"] = L.init_rms_norm(d)
+
+    if cfg.frontend != "none":
+        params["frontend_proj"] = L.init_linear(ks[4], cfg.frontend_dim, d)
+    if cfg.mtp_heads:
+        params["mtp"] = {
+            "proj": L.init_linear(ks[5], 2 * d, d),
+            "norm": L.init_rms_norm(d),
+            "block": init_decoder_block(ks[6], dataclasses.replace(
+                cfg, moe=None, d_ff=2 * d)),
+        }
+    return params
+
+
+# ---------------------------------------------------------------------------
+# stack execution
+# ---------------------------------------------------------------------------
+
+_AUX_KEYS = ("moe_lb_loss", "moe_z_loss", "moe_drop_fraction")
+
+
+def _zero_aux():
+    return {k: jnp.float32(0.0) for k in _AUX_KEYS}
+
+
+def _acc_aux(acc, aux):
+    return {k: acc[k] + aux.get(k, 0.0) for k in _AUX_KEYS}
+
+
+def _run_hybrid_grouped(rt, stacked, cfg, x, *, phase, positions,
+                        kv_len=None, caches=None, shared_params=None,
+                        shared_caches=None):
+    """zamba2 grouped execution: outer scan over n_groups, each group =
+    inner scan over attn_every mamba layers + one shared-attention
+    application. The shared cache (n_groups, B, Cap, hkv, hd) rides the
+    outer scan's xs/ys, so each group touches only its own slice."""
+    every = cfg.attn_every
+    n_layers = jax.tree_util.tree_leaves(stacked)[0].shape[0]
+    n_groups = n_layers // every
+    grouped = jax.tree.map(
+        lambda p: p.reshape(n_groups, every, *p.shape[1:]), stacked)
+
+    def group_body(carry, xs):
+        h, aux_acc = carry
+
+        def layer_body(hh, lx):
+            # NOTE: seq_shard_hint was tried here (§Perf Z3) and REFUTED:
+            # SSD scan + causal conv consume the full sequence, so GSPMD
+            # must all-gather the hint right back (1.96 s -> 4.42 s).
+            hh, new_c = apply_ssm_block(rt, lx["p"], cfg, hh, phase=phase,
+                                        cache=lx.get("c"))
+            return hh, ({"c": new_c} if new_c is not None else {})
+
+        inner_xs = {"p": xs["p"]}
+        if "c" in xs:
+            inner_xs["c"] = xs["c"]
+        h, inner_ys = jax.lax.scan(layer_body, h, inner_xs)
+
+        ys = dict(inner_ys) if isinstance(inner_ys, dict) else {}
+        if phase == "train":
+            h, _, _, _ = apply_decoder_block(rt, shared_params, cfg, h,
+                                             phase="train",
+                                             positions=positions)
+        else:
+            h, new_shared, _, _ = apply_decoder_block(
+                rt, shared_params, cfg, h, phase=phase, positions=positions,
+                cache=xs.get("s"), kv_len=kv_len)
+            if phase == "prefill":
+                # pad (B, S, ...) up to the pre-allocated capacity slice
+                def pad_to(full, one):
+                    pad = full.shape[1] - one.shape[1]
+                    if pad > 0:
+                        w = [(0, 0)] * one.ndim
+                        w[1] = (0, pad)
+                        one = jnp.pad(one, w)
+                    return one.astype(full.dtype)
+                new_shared = jax.tree.map(pad_to, xs["s"], new_shared)
+            ys["s"] = new_shared
+        return (h, aux_acc), ys
+
+    xs = {"p": grouped}
+    if caches is not None:
+        xs["c"] = jax.tree.map(
+            lambda c: c.reshape(n_groups, every, *c.shape[1:]), caches)
+    if shared_caches is not None and phase != "train":
+        xs["s"] = shared_caches
+    (x, aux), ys = jax.lax.scan(
+        jax.checkpoint(group_body) if phase == "train" else group_body,
+        (x, _zero_aux()), xs)
+    new_caches = None
+    if "c" in ys:
+        new_caches = jax.tree.map(
+            lambda c: c.reshape(n_layers, *c.shape[2:]), ys["c"])
+    return x, new_caches, ys.get("s"), aux
+
+
+def run_decoder_stack(rt, stacked, cfg, x, *, phase, positions, kv_len=None,
+                      caches=None, memory=None, cross_caches=None,
+                      causal=True):
+    """Scan the main decoder stack. caches/cross_caches are stacked (L, ...)."""
+    windows = window_schedule(cfg)
+    n_layers = jax.tree_util.tree_leaves(stacked)[0].shape[0]
+
+    def body(carry, xs):
+        h, aux_acc = carry
+        p = xs["p"]
+        # (seq_shard_hint tried here too — refuted, §Perf Z3/P1: the flash
+        # KV scan needs the full sequence per device.)
+        h, new_c, new_cross, aux = apply_decoder_block(
+            rt, p, cfg, h, phase=phase, positions=positions,
+            window=xs.get("w"), cache=xs.get("c"), kv_len=kv_len,
+            memory=memory, cross_cache=xs.get("x"), causal=causal)
+        ys = {}
+        if new_c is not None:
+            ys["c"] = new_c
+        if new_cross is not None:
+            ys["x"] = new_cross
+        return (h, _acc_aux(aux_acc, aux)), ys
+
+    xs = {"p": stacked}
+    if windows is not None:
+        xs["w"] = windows
+    if caches is not None:
+        xs["c"] = caches
+    if cross_caches is not None:
+        xs["x"] = cross_caches
+
+    fn = jax.checkpoint(body) if phase == "train" else body
+    (x, aux), ys = jax.lax.scan(fn, (x, _zero_aux()), xs)
+    return x, ys.get("c"), ys.get("x"), aux
+
+
+def run_ssm_stack(rt, stacked, cfg, x, *, phase, positions, kv_len=None,
+                  caches=None, shared_params=None, shared_caches=None):
+    """Mamba2 stack; zamba2 interleaves the shared attention block.
+
+    When attn_every divides n_layers the hybrid path uses a GROUPED outer
+    scan (inner scan over attn_every mamba layers, shared attention once
+    per group, shared cache as per-group scan xs/ys). The naive
+    cond-in-carry formulation forced GSPMD to rematerialize the whole
+    shared KV cache on every one of the 54 layers — 373 s of collectives
+    at prefill_32k vs 0.9 s after this restructure (EXPERIMENTS.md §Perf
+    iteration Z1)."""
+    n_layers = jax.tree_util.tree_leaves(stacked)[0].shape[0]
+    hybrid = shared_params is not None
+    if hybrid and cfg.attn_every and n_layers % cfg.attn_every == 0:
+        return _run_hybrid_grouped(rt, stacked, cfg, x, phase=phase,
+                                   positions=positions, kv_len=kv_len,
+                                   caches=caches,
+                                   shared_params=shared_params,
+                                   shared_caches=shared_caches)
+
+    def body(carry, xs):
+        h, shared_c, aux_acc = carry
+        h, new_c = apply_ssm_block(rt, xs["p"], cfg, h, phase=phase,
+                                   cache=xs.get("c"))
+        if hybrid:
+            li = xs["i"]
+            app_idx = li // cfg.attn_every
+            is_app = (li % cfg.attn_every) == (cfg.attn_every - 1)
+
+            def with_attn(h, shared_c):
+                if phase == "train":
+                    h2, _, _, _ = apply_decoder_block(
+                        rt, shared_params, cfg, h, phase="train",
+                        positions=positions)
+                    return h2, shared_c
+                if phase == "prefill":
+                    h2, new_cache, _, _ = apply_decoder_block(
+                        rt, shared_params, cfg, h, phase="prefill",
+                        positions=positions)
+                    # write (B,S,...) into the pre-allocated capacity slot
+                    new_shared = jax.tree.map(
+                        lambda full, one: jax.lax.dynamic_update_slice(
+                            full, one[None].astype(full.dtype),
+                            (app_idx,) + (0,) * (full.ndim - 1)),
+                        shared_c, new_cache)
+                    return h2, new_shared
+                layer_cache = jax.tree.map(lambda c: c[app_idx], shared_c)
+                h2, new_cache, _, _ = apply_decoder_block(
+                    rt, shared_params, cfg, h, phase=phase,
+                    positions=positions, cache=layer_cache, kv_len=kv_len)
+                new_shared = jax.tree.map(
+                    lambda full, one: jax.lax.dynamic_update_index_in_dim(
+                        full, one.astype(full.dtype), app_idx, 0),
+                    shared_c, new_cache)
+                return h2, new_shared
+
+            h, shared_c = jax.lax.cond(
+                is_app, with_attn, lambda h, sc: (h, sc), h, shared_c)
+        ys = {"c": new_c} if new_c is not None else {}
+        return (h, shared_c, aux_acc), ys
+
+    xs = {"p": stacked, "i": jnp.arange(n_layers)}
+    if caches is not None:
+        xs["c"] = caches
+    fn = jax.checkpoint(body) if phase == "train" else body
+    (x, shared_caches, aux), ys = jax.lax.scan(
+        fn, (x, shared_caches if hybrid else 0, _zero_aux()), xs)
+    return x, ys.get("c"), shared_caches if hybrid else None, aux
+
+
+# ---------------------------------------------------------------------------
+# embedding / head
+# ---------------------------------------------------------------------------
+
+def embed_tokens(rt, params, cfg, tokens):
+    return params["embed"]["tok"].astype(rt.dtype)[tokens]
+
+
+def lm_logits(rt, params, cfg, h):
+    h = L.rms_norm(h, params["final_norm"], cfg.norm_eps)
+    if cfg.tie_embeddings:
+        w = params["embed"]["tok"].astype(rt.dtype)
+        return jax.lax.dot_general(h, w, (((h.ndim - 1,), (1,)), ((), ())),
+                                   preferred_element_type=jnp.float32)
+    return L.apply_linear(
+        dataclasses.replace(rt, dtype=jnp.float32), params["lm_head"], h)
+
+
+def _frontend_tokens(rt, params, cfg, batch):
+    """Prepend stub-frontend embeddings (vlm patches / audio frames)."""
+    emb = batch["patch_embeds"] if cfg.frontend == "vision" else batch["frames"]
+    return L.apply_linear(rt, params["frontend_proj"], emb.astype(rt.dtype))
+
+
+# ---------------------------------------------------------------------------
+# phase entry points
+# ---------------------------------------------------------------------------
+
+def backbone(rt, params, cfg, h, *, phase, positions, kv_len=None,
+             caches=None, memory=None):
+    """Run the appropriate stack; returns (h, new_caches, aux)."""
+    fam = cfg.family
+    if fam in ("dense", "moe", "vlm"):
+        x, c, _, aux = run_decoder_stack(
+            rt, params["layers"], cfg, h, phase=phase, positions=positions,
+            kv_len=kv_len, caches=None if caches is None else caches["attn"])
+        new_caches = None if c is None else {"attn": c}
+    elif fam in ("ssm", "hybrid"):
+        shared_p = params.get("shared_attn")
+        shared_c = None if caches is None else caches.get("shared")
+        if fam == "hybrid" and shared_c is None and phase != "train":
+            raise ValueError("hybrid prefill/decode needs pre-allocated "
+                             "shared-attention caches (see prefill())")
+        x, c, sh, aux = run_ssm_stack(
+            rt, params["layers"], cfg, h, phase=phase, positions=positions,
+            kv_len=kv_len, caches=None if caches is None else caches["ssm"],
+            shared_params=shared_p, shared_caches=shared_c)
+        new_caches = None
+        if c is not None:
+            new_caches = {"ssm": c}
+            if sh is not None:
+                new_caches["shared"] = sh
+    elif fam == "encdec":
+        x, c, cross, aux = run_decoder_stack(
+            rt, params["layers"], cfg, h, phase=phase, positions=positions,
+            kv_len=kv_len, caches=None if caches is None else caches["attn"],
+            memory=memory,
+            cross_caches=None if caches is None else caches.get("cross"))
+        new_caches = None
+        if c is not None:
+            new_caches = {"attn": c, "cross": cross}
+    else:
+        raise ValueError(fam)
+    return x, new_caches, aux
+
+
+def encode_memory(rt, params, cfg, frames):
+    """encdec: run the (bidirectional) encoder over stub frame embeddings."""
+    h = _frontend_tokens(rt, params, cfg, {"frames": frames})
+    pos = jnp.arange(h.shape[1])[None, :]
+    h, _, _, _ = run_decoder_stack(rt, params["enc_layers"], cfg, h,
+                                   phase="train", positions=pos, causal=False)
+    return L.rms_norm(h, params["enc_norm"], cfg.norm_eps)
+
+
+def train_loss(rt, params, cfg, batch):
+    """batch: {"tokens": (B, S+1)} + frontend extras. Returns (loss, metrics)."""
+    tokens = batch["tokens"]
+    inp, labels = tokens[:, :-1], tokens[:, 1:]
+    b, s = inp.shape
+    h = embed_tokens(rt, params, cfg, inp)
+    memory = None
+    n_prefix = 0
+    if cfg.family == "encdec":
+        memory = encode_memory(rt, params, cfg, batch["frames"])
+    elif cfg.frontend == "vision":
+        front = _frontend_tokens(rt, params, cfg, batch)
+        n_prefix = front.shape[1]
+        h = jnp.concatenate([front, h], axis=1)
+    positions = jnp.arange(h.shape[1])[None, :]
+    h, _, aux = backbone(rt, params, cfg, h, phase="train",
+                         positions=positions, memory=memory)
+    h = h[:, n_prefix:]
+    logits = lm_logits(rt, params, cfg, h)              # (B, S, V) f32
+
+    logz = jax.nn.logsumexp(logits, axis=-1)
+    gold = jnp.take_along_axis(logits, labels[..., None], axis=-1)[..., 0]
+    ce = (logz - gold).mean()
+    zloss = 1e-4 * (logz ** 2).mean()
+    loss = ce + zloss + aux["moe_lb_loss"] + aux["moe_z_loss"]
+    if cfg.mtp_heads and "mtp" in params:
+        loss = loss + 0.1 * _mtp_loss(rt, params, cfg, h, tokens, n_prefix)
+    metrics = {"loss": loss, "ce": ce,
+               "acc": (logits.argmax(-1) == labels).mean(),
+               **{k: aux[k] for k in aux}}
+    return loss, metrics
+
+
+def _mtp_loss(rt, params, cfg, h, tokens, n_prefix):
+    """DeepSeek-V3 single-depth multi-token prediction: predict t+2 from
+    [h_t ; emb(t+1)] through one extra block (arXiv:2412.19437 §2.2)."""
+    p = params["mtp"]
+    emb_next = embed_tokens(rt, params, cfg, tokens[:, 1:-1])   # t+1 emb
+    h_in = jnp.concatenate(
+        [L.rms_norm(h[:, :-1], p["norm"], cfg.norm_eps), emb_next], axis=-1)
+    h2 = L.apply_linear(rt, p["proj"], h_in)
+    pos = jnp.arange(h2.shape[1])[None, :]
+    mtp_cfg = dataclasses.replace(cfg, moe=None, d_ff=2 * cfg.d_model)
+    h2, _, _, _ = apply_decoder_block(rt, p["block"], mtp_cfg, h2,
+                                      phase="train", positions=pos)
+    logits = lm_logits(rt, params, cfg, h2)
+    labels = tokens[:, 2:]
+    logz = jax.nn.logsumexp(logits, axis=-1)
+    gold = jnp.take_along_axis(logits, labels[..., None], axis=-1)[..., 0]
+    return (logz - gold).mean()
+
+
+def prefill(rt, params, cfg, batch, *, capacity: int | None = None,
+            logit_position: int | None = None):
+    """Process the full prompt; returns (logits, caches, length).
+
+    Logits are taken at `logit_position` (default: last position — the
+    engine passes prompt_len-1 when prompts are right-padded to a bucket).
+    batch: {"tokens": (B, S)} + frontend extras."""
+    tokens = batch["tokens"]
+    b, s = tokens.shape
+    h = embed_tokens(rt, params, cfg, tokens)
+    memory = None
+    n_prefix = 0
+    if cfg.family == "encdec":
+        memory = encode_memory(rt, params, cfg, batch["frames"])
+    elif cfg.frontend == "vision":
+        front = _frontend_tokens(rt, params, cfg, batch)
+        n_prefix = front.shape[1]
+        h = jnp.concatenate([front, h], axis=1)
+    total = h.shape[1]
+    capacity = capacity or total
+    positions = jnp.arange(total)[None, :]
+    caches_in = (init_cache(cfg, b, capacity) if cfg.family == "hybrid"
+                 else None)
+    h, caches, _ = backbone(rt, params, cfg, h, phase="prefill",
+                            positions=positions, memory=memory,
+                            caches=caches_in)
+    pos = total - 1 if logit_position is None else n_prefix + logit_position
+    logits = lm_logits(rt, params, cfg, h[:, pos:pos + 1])[:, 0]
+
+    # pad prefill KV caches out to capacity
+    if caches is not None and "attn" in caches:
+        def pad_cache(c):
+            pad = capacity - c.shape[2]
+            if pad <= 0:
+                return c[:, :, :capacity].astype(CACHE_DTYPE)
+            w = [(0, 0)] * c.ndim
+            w[2] = (0, pad)
+            return jnp.pad(c, w).astype(CACHE_DTYPE)
+        caches = dict(caches)
+        caches["attn"] = jax.tree.map(pad_cache, caches["attn"])
+    return logits, caches, total
+
+
+def decode_step(rt, params, cfg, tokens, caches, cache_len):
+    """One decoding step. tokens: (B, 1); cache_len: scalar or (B,) int32 —
+    tokens already in each row's cache. Returns (logits (B,V), caches)."""
+    b = tokens.shape[0]
+    lens = jnp.broadcast_to(jnp.asarray(cache_len, jnp.int32), (b,))
+    h = embed_tokens(rt, params, cfg, tokens)
+    positions = lens[:, None]
+    h, caches, _ = backbone(rt, params, cfg, h, phase="decode",
+                            positions=positions, kv_len=lens + 1,
+                            caches=caches)
+    return lm_logits(rt, params, cfg, h[:, -1:])[:, 0], caches

@@ -1,0 +1,175 @@
+"""Top-k MoE with capacity-based gather/scatter token routing.
+
+TPU-native expert parallelism (DESIGN.md): token activations are sharded
+over the data axis, expert weights over the model axis (when n_experts is
+divisible; else per-expert d_ff is sharded). Routing uses flat
+gather/scatter-add rather than the GShard (T,E,C) dispatch einsum — the
+dispatch einsum costs T·E·C·D MXU FLOPs of pure masking (≈ the expert FFN
+FLOPs themselves at DeepSeek-V3 scale); gathers move the same bytes with
+zero FLOPs. Tokens beyond an expert's capacity are dropped (standard
+Switch/GShard semantics, capacity_factor config).
+
+Aux losses: Switch load-balance loss + router z-loss.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.layers import Runtime, apply_linear, init_linear
+
+
+def init_moe(key, cfg) -> dict:
+    m = cfg.moe
+    d = cfg.d_model
+    ep = m.n_experts_padded      # bank rows >= n_experts never routed to
+    ks = jax.random.split(key, 5)
+    scale = d ** -0.5
+
+    def expert_bank(k):
+        return (jax.random.normal(k, (ep, d, m.d_ff_expert),
+                                  jnp.float32) * scale)
+
+    p = {
+        "router": init_linear(ks[0], d, m.n_experts, scale=scale),
+        "w_gate": expert_bank(ks[1]),
+        "w_up": expert_bank(ks[2]),
+        "w_down": (jax.random.normal(ks[3], (ep, m.d_ff_expert, d),
+                                     jnp.float32) * (m.d_ff_expert ** -0.5)),
+    }
+    if m.n_shared_experts:
+        from repro.models.layers import init_swiglu
+        p["shared"] = init_swiglu(ks[4], d, m.d_ff_expert * m.n_shared_experts)
+    return p
+
+
+def _has_pod() -> bool:
+    import jax
+    am = jax.sharding.get_abstract_mesh()
+    return "pod" in (getattr(am, "axis_names", ()) or ())
+
+
+def _read_bank(rt: Runtime, w):
+    """Expert banks (E,D,F) may be NestedTensors after to_serving().
+
+    fp16 mode reads the lossless reconstruction; fp8 mode reads the upper
+    byte dequantized (weight-precision switch — activation quant is applied
+    on the dense linears; see DESIGN.md §Precision paths)."""
+    from repro.core.nestedfp import NestedTensor, fp8_dequant
+    if isinstance(w, NestedTensor):
+        if rt.mode == "fp8" and not w.is_exception:
+            return fp8_dequant(w.upper, rt.dtype)
+        return w.read_f16().astype(rt.dtype)
+    return w.astype(rt.dtype)
+
+
+def _expert_ffn(rt: Runtime, p: dict, xb: jax.Array,
+                local: bool = False) -> jax.Array:
+    """xb: (G, E, C, D) -> (G, E, C, D), batched-over-experts SwiGLU.
+
+    local=True (small banks): every intermediate is pinned group-local so
+    the ONLY resharding is the cheap bank all-gather (§Perf M2)."""
+    dt = rt.dtype
+    acc = jnp.bfloat16 if rt.fast_accum else jnp.float32
+
+    def pin(t):
+        if not local:
+            return t
+        from repro.models.layers import shard_hint
+        d_axes = ("pod", "data") if _has_pod() else "data"
+        return shard_hint(t, d_axes, *([None] * (t.ndim - 1)))
+
+    gate = pin(jnp.einsum("gecd,edf->gecf", xb.astype(dt),
+                          _read_bank(rt, p["w_gate"]),
+                          preferred_element_type=acc))
+    up = pin(jnp.einsum("gecd,edf->gecf", xb.astype(dt),
+                        _read_bank(rt, p["w_up"]),
+                        preferred_element_type=acc))
+    h = (jax.nn.silu(gate.astype(jnp.float32)) * up.astype(jnp.float32)
+         ).astype(dt)
+    return pin(jnp.einsum("gecf,efd->gecd", h, _read_bank(rt, p["w_down"]),
+                          preferred_element_type=acc))
+
+
+def moe_block(rt: Runtime, p: dict, cfg, x: jax.Array
+              ) -> tuple[jax.Array, dict]:
+    """x: (B, S, D) -> (B, S, D), aux dict with losses + routing stats.
+
+    GROUPED capacity routing (GShard-style groups = batch rows): every
+    sequence routes within its own capacity buffer (G, E_pad, C_g, D), so
+    the dispatch scatter is fully LOCAL on data-sharded activations.
+    GSPMD then reshapes the g<->e movement into the expert einsum itself —
+    all-to-all (big banks, deepseek-v3) or bank all-gather (small banks,
+    granite) — instead of all-reducing a global-capacity buffer across the
+    data axis on every layer (the flat-T formulation cost 48.5 s/step of
+    collectives on granite train_4k; §Perf iteration M1)."""
+    m = cfg.moe
+    b, s, d = x.shape
+    g = b                                                       # groups
+    # --- router (f32 for numerics) ---
+    logits = apply_linear(rt, p["router"], x).astype(jnp.float32)  # (G,S,E)
+    probs = jax.nn.softmax(logits, axis=-1)
+    gate_vals, expert_idx = jax.lax.top_k(probs, m.top_k)       # (G,S,K)
+    gate_vals = gate_vals / jnp.maximum(
+        gate_vals.sum(-1, keepdims=True), 1e-9)                 # renormalize
+
+    # --- per-group capacity assignment ---
+    cap = max(int(m.top_k * s * m.capacity_factor / m.n_experts), m.top_k)
+    ep = m.n_experts_padded
+    flat_e = expert_idx.reshape(g, s * m.top_k)                 # (G, S*K)
+    onehot = jax.nn.one_hot(flat_e, m.n_experts, dtype=jnp.int32)
+    pos = jnp.cumsum(onehot, axis=1) * onehot - 1               # per-group slot
+    slot = jnp.max(pos, axis=-1)                                # (G, S*K)
+    keep = slot < cap
+    slot_c = jnp.minimum(slot, cap - 1)
+
+    # --- dispatch: LOCAL scatter-add into (G, E_pad, C, D). Dropped tokens
+    # contribute masked zeros, so clamped-slot collisions add nothing.
+    token_of_choice = jnp.repeat(jnp.arange(s), m.top_k)        # (S*K,)
+    vals = (jnp.take_along_axis(x, token_of_choice[None, :, None], axis=1)
+            * keep[..., None]).astype(rt.dtype)                 # (G,S*K,D)
+    gi = jnp.arange(g)[:, None]
+    buf = jnp.zeros((g, ep, cap, d), rt.dtype)
+    xb = buf.at[gi, flat_e, slot_c].add(vals)
+
+    # --- expert compute (batched over groups) ---
+    # Small banks (granite: 94M params): pin the capacity buffers
+    # GROUP-local (data axis) so dispatch/combine never cross devices and
+    # the expert einsum all-gathers the (small) banks instead — GSPMD left
+    # to itself replicates G and all-reduces partial buffers across data
+    # every layer (§Perf M2). Big banks (deepseek-v3) stay consumer-driven
+    # (expert-parallel buf + all-to-all).
+    bank = p["w_gate"]
+    bank_elems = 1
+    for dd in getattr(bank, "shape", (0,)):
+        bank_elems *= dd
+    local = bank_elems * 3 * 4 <= 2 ** 30
+    if local:
+        from repro.models.layers import shard_hint
+        xb = shard_hint(xb, ("pod", "data") if _has_pod() else "data",
+                        None, None, None)
+    yb = _expert_ffn(rt, p, xb, local=local)                    # (G,E_pad,C,D)
+
+    # --- combine: gather outputs back, weighted by renormalized gates ---
+    gathered = yb[gi, flat_e, slot_c]                           # (G,S*K,D)
+    w = (gate_vals.reshape(g, -1) * keep).astype(jnp.float32)
+    y = jnp.zeros((g, s, d), jnp.float32)
+    y = y.at[gi, token_of_choice[None, :].repeat(g, 0)].add(
+        gathered.astype(jnp.float32) * w[..., None])
+
+    if m.n_shared_experts:
+        from repro.models.layers import swiglu
+        y = y + swiglu(rt, p["shared"], x).astype(jnp.float32)
+
+    # --- aux losses (Switch §2.2 + z-loss) ---
+    density = jnp.mean(jax.nn.one_hot(expert_idx, m.n_experts,
+                                      dtype=jnp.float32), axis=(0, 1, 2))
+    router_prob = jnp.mean(probs, axis=(0, 1))                  # (E,)
+    lb_loss = m.n_experts * jnp.sum(density * router_prob) * m.load_balance_loss
+    z_loss = jnp.mean(jax.nn.logsumexp(logits, axis=-1) ** 2) * m.router_z_loss
+    dropped = 1.0 - jnp.mean(keep.astype(jnp.float32))
+
+    aux = {"moe_lb_loss": lb_loss, "moe_z_loss": z_loss,
+           "moe_drop_fraction": dropped}
+    return y.reshape(b, s, d).astype(rt.dtype), aux

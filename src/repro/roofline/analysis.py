@@ -1,0 +1,209 @@
+"""Roofline analysis from compiled dry-run artifacts (DESIGN.md §6).
+
+Terms per (arch × shape × mesh), all PER-CHIP (cost_analysis reports the
+post-SPMD per-device program; verified against a hand-checked example):
+
+    compute    = flops / PEAK_FLOPS
+    memory     = bytes_accessed / HBM_BW
+    collective = Σ_type bytes_type · mult_type / ICI_BW
+
+Hardware constants: TPU v5e-like — 197 TFLOP/s bf16, 819 GB/s HBM,
+~50 GB/s/link ICI. FP8-mode GEMMs run the MXU at 2× bf16; XLA:CPU cost
+analysis cannot know that, so fp8 rows also report `compute_fp8_adj`
+(= compute / 2 on the GEMM-dominated fraction — conservative: we apply it
+to the whole FLOP count and flag it as a bound).
+"""
+
+from __future__ import annotations
+
+import re
+from typing import Any
+
+PEAK_FLOPS = 197e12          # bf16 FLOP/s per chip
+HBM_BW = 819e9               # bytes/s per chip
+ICI_BW = 50e9                # bytes/s per link
+
+_DTYPE_BYTES = {
+    "f64": 8, "s64": 8, "u64": 8, "c64": 8,
+    "f32": 4, "s32": 4, "u32": 4,
+    "bf16": 2, "f16": 2, "s16": 2, "u16": 2,
+    "f8e4m3fn": 1, "f8e5m2": 1, "f8e4m3": 1, "s8": 1, "u8": 1, "pred": 1,
+}
+
+_COLL_RE = re.compile(
+    r"=\s*(?P<shapes>\([^)]*\)|\S+)\s+"
+    r"(?P<op>all-gather|all-reduce|reduce-scatter|all-to-all|"
+    r"collective-permute)(?P<suffix>-start|-done)?\(")
+
+_SHAPE_RE = re.compile(r"(\w+)\[([0-9,]*)\]")
+
+# bytes-on-wire multiplier per collective (ring algorithms, large n)
+_MULT = {"all-gather": 1.0, "all-reduce": 2.0, "reduce-scatter": 1.0,
+         "all-to-all": 1.0, "collective-permute": 1.0}
+
+
+def _shape_bytes(segment: str) -> int:
+    total = 0
+    for dt, dims in _SHAPE_RE.findall(segment):
+        if dt not in _DTYPE_BYTES:
+            continue
+        n = 1
+        for d in dims.split(","):
+            if d:
+                n *= int(d)
+        total += n * _DTYPE_BYTES[dt]
+    return total
+
+
+_FN_OPEN_RE = re.compile(r"^(ENTRY\s+)?(%?[\w\.\-]+)\s*\(.*\)\s*->\s*.*\{")
+_WHILE_BODY_RE = re.compile(r"\bwhile\(.*?body=(%?[\w\.\-]+)")
+_TRIP_RE = re.compile(r'known_trip_count[^0-9]*?(\d+)')
+_CALL_RE = re.compile(
+    r"\b(?:condition|to_apply|calls)=\{?(%?[\w\.\-]+(?:,\s*%?[\w\.\-]+)*)\}?")
+
+
+def _parse_computations(hlo_text: str) -> dict[str, list[str]]:
+    comps: dict[str, list[str]] = {}
+    cur = None
+    for line in hlo_text.splitlines():
+        m = _FN_OPEN_RE.match(line.strip())
+        if m:
+            cur = "__ENTRY__" if m.group(1) else m.group(2).lstrip("%")
+            comps[cur] = []
+            continue
+        if cur is not None:
+            comps[cur].append(line)
+    return comps
+
+
+def _loop_multipliers(comps: dict[str, list[str]]) -> dict[str, float]:
+    """Execution multiplier of every computation: product of the EXACT
+    known_trip_count annotations along its while ancestry (XLA emits
+    these on CPU/TPU when the induction variable is static). Computations
+    reached via non-while calls (fusions, reducers, conds) inherit the
+    caller's multiplier."""
+    mult = {"__ENTRY__": 1.0}
+    frontier = ["__ENTRY__"]
+    seen_edges = set()
+    while frontier:
+        nxt = []
+        for name in frontier:
+            m0 = mult[name]
+            for line in comps.get(name, ()):
+                called: list[tuple[str, float]] = []
+                wb = _WHILE_BODY_RE.search(line)
+                if wb:
+                    tm = _TRIP_RE.search(line)
+                    trips = float(tm.group(1)) if tm else 1.0
+                    called.append((wb.group(1).lstrip("%"), m0 * trips))
+                for cm in _CALL_RE.finditer(line):
+                    for c in cm.group(1).split(","):
+                        c = c.strip().lstrip("%").rstrip("}")
+                        if c:
+                            called.append((c, m0))
+                for cname, cm_ in called:
+                    if cname in comps and mult.get(cname, 0.0) < cm_ \
+                            and (name, cname, cm_) not in seen_edges:
+                        seen_edges.add((name, cname, cm_))
+                        mult[cname] = cm_
+                        nxt.append(cname)
+        frontier = nxt
+    return mult
+
+
+def collective_bytes(hlo_text: str, *, trips_by_depth: list[float] | None = None
+                     ) -> dict[str, Any]:
+    """Collective result-shape bytes from the (per-device) optimized HLO.
+
+    XLA emits while-loop bodies once in the text; each collective's bytes
+    are multiplied by its computation's execution count, read from the
+    exact `known_trip_count` while annotations (product over the loop
+    ancestry). `-done` ops skipped (async pairs). `trips_by_depth` is a
+    jaxpr-derived fallback for text without trip annotations."""
+    comps = _parse_computations(hlo_text)
+    mults = _loop_multipliers(comps)
+    fallback = 1.0
+    for t in (trips_by_depth or []):
+        fallback *= t
+    per_type: dict[str, float] = {}
+    counts: dict[str, int] = {}
+    once_total = 0.0
+    unattributed = 0
+
+    for name, lines in comps.items():
+        m0 = mults.get(name)
+        for line in lines:
+            m = _COLL_RE.search(line)
+            if not m or m.group("suffix") == "-done":
+                continue
+            op = m.group("op")
+            b = _shape_bytes(m.group("shapes"))
+            mm = m0 if m0 is not None else fallback
+            if m0 is None:
+                unattributed += 1
+            per_type[op] = per_type.get(op, 0.0) + b * mm
+            counts[op] = counts.get(op, 0) + 1
+            once_total += b
+    weighted = sum(_MULT[t] * b for t, b in per_type.items())
+    return {"bytes_by_type": per_type, "counts_by_type": counts,
+            "bytes_once_total": once_total,
+            "n_unattributed": unattributed,
+            "weighted_wire_bytes": weighted}
+
+
+def roofline_terms(flops: float, bytes_accessed: float,
+                   weighted_coll_bytes: float, *, fp8: bool = False
+                   ) -> dict[str, float]:
+    compute = flops / PEAK_FLOPS
+    terms = {
+        "compute_s": compute,
+        "memory_s": bytes_accessed / HBM_BW,
+        "collective_s": weighted_coll_bytes / ICI_BW,
+    }
+    if fp8:
+        terms["compute_fp8_adj_s"] = compute / 2.0
+    key = max(("compute_s", "memory_s", "collective_s"), key=terms.__getitem__)
+    terms["dominant"] = key
+    terms["bound_step_s"] = terms[key]
+    return terms
+
+
+# ---------------------------------------------------------------------------
+# MODEL_FLOPS (useful-compute reference)
+# ---------------------------------------------------------------------------
+
+def count_params(param_tree, *, active_expert_fraction: float | None = None
+                 ) -> dict[str, float]:
+    """Total + active params from a ShapeDtypeStruct tree. Expert banks
+    (leading dim = n_experts paths w_gate/w_up/w_down) are scaled by
+    `active_expert_fraction` for the active count."""
+    import jax
+
+    total = 0.0
+    active = 0.0
+    for path, leaf in jax.tree_util.tree_flatten_with_path(param_tree)[0]:
+        keys = [str(getattr(k, "key", getattr(k, "name", "")))
+                for k in path]
+        n = 1.0
+        for d in leaf.shape:
+            n *= d
+        total += n
+        if active_expert_fraction is not None and any(
+                k in ("w_gate", "w_up", "w_down") for k in keys):
+            active += n * active_expert_fraction
+        else:
+            active += n
+    return {"total": total, "active": active}
+
+
+def model_flops(cfg, shape, n_params_active: float) -> float:
+    """6·N·D for training, 2·N·tokens for serving steps (per whole step,
+    all chips)."""
+    if shape.kind == "train":
+        tokens = shape.global_batch * shape.seq_len
+        return 6.0 * n_params_active * tokens
+    if shape.kind == "prefill":
+        tokens = shape.global_batch * shape.seq_len
+        return 2.0 * n_params_active * tokens
+    tokens = shape.global_batch  # one token per sequence
+    return 2.0 * n_params_active * tokens

@@ -1,0 +1,189 @@
+"""Continuous-batching serving engine with per-iteration dual precision.
+
+ORCA-style iteration-level scheduling: each engine step admits queued
+requests into free slots (prefill) and advances all active slots by one
+token (batched decode). The DualPrecisionController picks FP16 or FP8 per
+iteration; because NestedFP serves both precisions from the same
+weight buffers, the switch costs nothing — the engine simply dispatches
+to the other pre-compiled executable (paper §5.3 "per-iteration precision
+switching").
+
+Greedy sampling; prompt lengths are bucketed to limit prefill recompiles.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import Any, Callable
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import ArchConfig
+from repro.core.policy import DualPrecisionController, StepObservation
+from repro.models import model as M
+from repro.models.layers import Runtime
+from repro.serving.kvcache import SlotManager
+
+
+@dataclasses.dataclass
+class Request:
+    request_id: str
+    tokens: list[int]
+    max_new: int
+    arrival_s: float = 0.0
+    # filled by the engine:
+    output: list[int] = dataclasses.field(default_factory=list)
+    first_token_s: float | None = None
+    finished_s: float | None = None
+    token_times: list[float] = dataclasses.field(default_factory=list)
+    modes: list[str] = dataclasses.field(default_factory=list)
+
+
+def _bucket(n: int, minimum: int = 16) -> int:
+    b = minimum
+    while b < n:
+        b *= 2
+    return b
+
+
+class Engine:
+    def __init__(self, cfg: ArchConfig, serving_params, *, n_slots: int,
+                 capacity: int, controller: DualPrecisionController | None = None,
+                 forced_mode: str | None = None, backend: str = "ref",
+                 kv_planar: bool = False,
+                 clock: Callable[[], float] = time.monotonic):
+        self.cfg = cfg
+        self.params = serving_params
+        self.slots = SlotManager(n_slots, capacity)
+        self.controller = controller
+        self.forced_mode = forced_mode
+        self.kv_planar = kv_planar and cfg.family in ("dense", "moe", "vlm") \
+            and cfg.mla is None
+        self.clock = clock
+        self.queue: list[Request] = []
+        self.active: dict[int, Request] = {}
+        self.finished: list[Request] = []
+        self.caches = M.init_cache(cfg, n_slots, capacity,
+                                   planar=self.kv_planar)
+        self.lens = np.zeros(n_slots, np.int32)
+        self._rts = {m: Runtime(mode=m, backend=backend, dtype=jnp.float32)
+                     for m in ("fp16", "fp8")}
+        self._decode = {
+            m: jax.jit(lambda p, c, t, l, _m=m: M.decode_step(
+                self._rts[_m], p, cfg, t, c, l))
+            for m in ("fp16", "fp8")}
+        self._prefill_cache: dict[tuple[str, int], Any] = {}
+        self.iteration = 0
+
+    # -- public API -----------------------------------------------------------
+    def submit(self, req: Request) -> None:
+        self.queue.append(req)
+
+    def run(self, max_iters: int = 10_000) -> list[Request]:
+        while (self.queue or self.active) and self.iteration < max_iters:
+            self.step()
+        return self.finished
+
+    # -- internals ------------------------------------------------------------
+    def _mode(self, batch_tokens: int) -> str:
+        if self.forced_mode:
+            return self.forced_mode
+        if self.controller is None:
+            return "fp16"
+        obs = StepObservation(batch_tokens=batch_tokens,
+                              queue_depth=len(self.queue),
+                              measured_step_ms=None)
+        return self.controller.decide(obs)
+
+    def _prefill_fn(self, mode: str, bucket: int, plen: int):
+        """Prompts are RIGHT-padded to `bucket` for attention archs (causal
+        masking makes the pad suffix invisible to real tokens; the pad
+        region of the cache is masked out by per-slot lengths). SSM/hybrid
+        state would absorb pad tokens, so those archs prefill at exact
+        length (bucket == plen)."""
+        key = (mode, bucket, plen)
+        if key not in self._prefill_cache:
+            rt = self._rts[mode]
+            cfg = self.cfg
+
+            def fn(p, tokens):
+                logits, caches, _ = M.prefill(rt, p, cfg,
+                                              {"tokens": tokens},
+                                              capacity=self.slots.capacity,
+                                              logit_position=plen - 1)
+                if self.kv_planar:
+                    caches = M.planarize_cache(caches)
+                return logits, caches
+            self._prefill_cache[key] = jax.jit(fn)
+        return self._prefill_cache[key]
+
+    def _admit(self, mode: str) -> None:
+        if self.cfg.family == "encdec":
+            raise NotImplementedError(
+                "engine serves decoder-only archs; enc-dec serving is "
+                "covered by the dry-run + benchmarks")
+        pad_ok = self.cfg.family in ("dense", "moe", "vlm")
+        while self.queue and self.slots.n_free() > 0:
+            req = self.queue[0]
+            idx = self.slots.try_allocate(req.request_id, len(req.tokens),
+                                          req.max_new)
+            if idx is None:
+                return
+            self.queue.pop(0)
+            plen = len(req.tokens)
+            bucket = _bucket(plen) if pad_ok else plen
+            toks = np.zeros((1, bucket), np.int32)
+            toks[0, :plen] = req.tokens               # right-pad
+            logits, pc = self._prefill_fn(mode, bucket, plen)(
+                self.params, jnp.asarray(toks))
+            # install the prefilled caches into the slot
+            self.caches = jax.tree.map(
+                lambda full, one: full.at[:, idx].set(
+                    one[:, 0].astype(full.dtype))
+                if full.ndim >= 2 else full, self.caches, pc)
+            self.lens[idx] = plen
+            tok = int(np.asarray(jnp.argmax(logits, -1))[0])
+            req.output.append(tok)
+            now = self.clock()
+            req.first_token_s = now
+            req.token_times.append(now)
+            req.modes.append(mode)
+            self.active[idx] = req
+            self.slots.slots[idx].generated = 1
+
+    def step(self) -> None:
+        self.iteration += 1
+        batch_tokens = len(self.active) + sum(
+            len(r.tokens) for r in self.queue[: self.slots.n_free()])
+        mode = self._mode(max(batch_tokens, 1))
+        self._admit(mode)
+        if not self.active:
+            return
+        tokens = np.zeros((self.slots.n_slots, 1), np.int32)
+        for idx, req in self.active.items():
+            tokens[idx, 0] = req.output[-1]
+        logits, self.caches = self._decode[mode](
+            self.params, self.caches, jnp.asarray(tokens),
+            jnp.asarray(self.lens))
+        nxt = np.asarray(jnp.argmax(logits, -1))
+        now = self.clock()
+        done = []
+        for idx, req in list(self.active.items()):
+            self.lens[idx] += 1
+            req.output.append(int(nxt[idx]))
+            req.token_times.append(now)
+            req.modes.append(mode)
+            slot = self.slots.slots[idx]
+            slot.generated += 1
+            slot.length += 1
+            if slot.generated >= req.max_new \
+                    or slot.length + 1 >= self.slots.capacity:
+                req.finished_s = now
+                done.append(idx)
+        for idx in done:
+            self.finished.append(self.active.pop(idx))
+            self.slots.release(idx)
+            self.lens[idx] = 0

@@ -1,0 +1,112 @@
+"""Byte-planar KV cache ("NestedKV", beyond-paper extension DESIGN.md §8):
+the f16 top byte IS a float8_e5m2 value, so a two-plane cache serves
+lossless fp16 reads and half-traffic fp8 reads — the paper's nesting idea
+applied to the decode bottleneck our roofline identified."""
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import nestedfp as nf
+from repro.configs import ARCHS
+from repro.models import model as M
+from repro.models.convert import to_serving
+from repro.models.layers import Runtime
+
+
+class TestBytePlanes:
+    def test_roundtrip_exhaustive_all_f16(self):
+        bits = np.arange(1 << 16, dtype=np.uint16).view(np.float16)
+        hi, lo = nf.split_bytes(jnp.asarray(bits))
+        back = np.asarray(nf.join_bytes(hi, lo))
+        np.testing.assert_array_equal(back.view(np.uint16),
+                                      bits.view(np.uint16))
+
+    def test_hi_plane_is_exact_e5m2_truncation(self):
+        import ml_dtypes
+        bits = np.arange(1 << 16, dtype=np.uint16)
+        vals = bits.view(np.float16)
+        hi, _ = nf.split_bytes(jnp.asarray(vals))
+        ours = np.asarray(hi).view(ml_dtypes.float8_e5m2)
+        # truncating the top byte == RTZ cast of the f16 value to e5m2
+        want = (bits >> 8).astype(np.uint8).view(ml_dtypes.float8_e5m2)
+        np.testing.assert_array_equal(ours.view(np.uint8),
+                                      want.view(np.uint8))
+
+    @settings(max_examples=50, deadline=None)
+    @given(st.lists(st.floats(-100, 100, width=16, allow_nan=False),
+                    min_size=1, max_size=64))
+    def test_e5m2_view_error_bounded(self, vals):
+        """Truncation error < 1 e5m2 ulp (2^-2 relative)."""
+        w = np.asarray(vals, dtype=np.float16)
+        hi, _ = nf.split_bytes(jnp.asarray(w))
+        approx = np.asarray(nf.e5m2_view(hi))
+        wf = np.abs(w.astype(np.float64))
+        err = np.abs(approx - w.astype(np.float64))
+        assert np.all(err <= np.maximum(wf * 0.25, 2**-16))
+
+
+@pytest.fixture(scope="module")
+def served():
+    cfg = ARCHS["qwen3-8b"].reduced()
+    params = to_serving(M.init_params(jax.random.PRNGKey(0), cfg))
+    return cfg, params
+
+
+class TestPlanarDecode:
+    def test_fp16_planar_bit_identical(self, served):
+        cfg, params = served
+        rt = Runtime(mode="fp16", backend="ref", dtype=jnp.float32)
+        toks = jax.random.randint(jax.random.PRNGKey(1), (2, 16), 0,
+                                  cfg.vocab_size)
+        lg, caches, length = M.prefill(rt, params, cfg, {"tokens": toks},
+                                       capacity=24)
+        t = jnp.argmax(lg, -1)[:, None].astype(jnp.int32)
+        a, _ = M.decode_step(rt, params, cfg, t, caches, jnp.int32(length))
+        b, _ = M.decode_step(rt, params, cfg, t, M.planarize_cache(caches),
+                             jnp.int32(length))
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+    def test_fp8_planar_close(self, served):
+        cfg, params = served
+        rt16 = Runtime(mode="fp16", backend="ref", dtype=jnp.float32)
+        rt8 = Runtime(mode="fp8", backend="ref", dtype=jnp.float32)
+        toks = jax.random.randint(jax.random.PRNGKey(2), (2, 16), 0,
+                                  cfg.vocab_size)
+        lg, caches, length = M.prefill(rt16, params, cfg, {"tokens": toks},
+                                       capacity=24)
+        t = jnp.argmax(lg, -1)[:, None].astype(jnp.int32)
+        a, _ = M.decode_step(rt16, params, cfg, t, caches, jnp.int32(length))
+        c, _ = M.decode_step(rt8, params, cfg, t, M.planarize_cache(caches),
+                             jnp.int32(length))
+        a, c = np.asarray(a).ravel(), np.asarray(c).ravel()
+        cos = a @ c / (np.linalg.norm(a) * np.linalg.norm(c) + 1e-9)
+        assert cos > 0.97, cos
+
+    def test_planar_cache_chained_decode(self, served):
+        """Multiple planar decode steps stay consistent with f16-cache."""
+        cfg, params = served
+        rt = Runtime(mode="fp16", backend="ref", dtype=jnp.float32)
+        toks = jax.random.randint(jax.random.PRNGKey(3), (1, 12), 0,
+                                  cfg.vocab_size)
+        lg, cf, length = M.prefill(rt, params, cfg, {"tokens": toks},
+                                   capacity=24)
+        cp = M.planarize_cache(cf)
+        t = jnp.argmax(lg, -1)[:, None].astype(jnp.int32)
+        for i in range(4):
+            a, cf = M.decode_step(rt, params, cfg, t, cf,
+                                  jnp.int32(length + i))
+            b, cp = M.decode_step(rt, params, cfg, t, cp,
+                                  jnp.int32(length + i))
+            np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+            t = jnp.argmax(a, -1)[:, None].astype(jnp.int32)
+
+    def test_planar_cache_memory_identical(self, served):
+        cfg, _ = served
+        plain = M.init_cache(cfg, 2, 32)
+        planar = M.init_cache(cfg, 2, 32, planar=True)
+        nb = lambda t: sum(l.size * l.dtype.itemsize
+                           for l in jax.tree_util.tree_leaves(t))
+        assert nb(plain) == nb(planar)   # zero memory overhead, like NestedFP

@@ -1,0 +1,118 @@
+"""Hypothesis property tests on system-level invariants (beyond the
+format-level exhaustive tests): engine/slot accounting, simulator
+conservation laws, quantizer bounds, trace determinism."""
+
+import numpy as np
+import jax.numpy as jnp
+from hypothesis import given, settings, strategies as st
+
+from repro.core import nestedfp as nf
+from repro.core import quant
+from repro.core.policy import DualPrecisionController, SLOConfig, StepObservation
+from repro.serving import simulate, trace
+from repro.serving.kvcache import SlotManager
+
+
+class TestSlotManagerInvariants:
+    @settings(max_examples=100, deadline=None)
+    @given(st.lists(st.tuples(st.sampled_from(["alloc", "free"]),
+                              st.integers(0, 7)), min_size=1, max_size=60))
+    def test_never_double_allocates_or_leaks(self, ops):
+        sm = SlotManager(4, 128)
+        live: dict[int, str] = {}
+        counter = 0
+        for op, arg in ops:
+            if op == "alloc":
+                idx = sm.try_allocate(f"r{counter}", 8, 4)
+                counter += 1
+                if idx is not None:
+                    assert idx not in live, "double allocation"
+                    live[idx] = sm.slots[idx].request_id
+            else:
+                if live:
+                    idx = sorted(live)[arg % len(live)]
+                    sm.release(idx)
+                    del live[idx]
+            assert sm.n_free() == sm.n_slots - len(live)
+            assert set(sm.active()) == set(live)
+
+
+class TestSimulatorInvariants:
+    @settings(max_examples=25, deadline=None)
+    @given(st.integers(0, 10_000), st.floats(1.0, 12.0))
+    def test_all_requests_finish_and_time_monotone(self, seed, rate):
+        reqs = trace.azure_like(duration_s=20, mean_rate=rate, seed=seed,
+                                prompt_len=64, max_new=32)
+        cost = simulate.CostModel()
+        for pol in ("fp16", "fp8", "dual"):
+            r = simulate.simulate(reqs, cost, policy=pol)
+            assert r.n_finished == len(reqs), (pol, r.n_finished, len(reqs))
+            assert r.duration_s >= 0
+            assert 0.0 <= r.fp16_fraction <= 1.0
+
+    @settings(max_examples=20, deadline=None)
+    @given(st.integers(0, 10_000))
+    def test_fp8_never_slower_than_fp16(self, seed):
+        reqs = trace.azure_like(duration_s=15, mean_rate=6, seed=seed)
+        cost = simulate.CostModel()
+        r16 = simulate.simulate(reqs, cost, policy="fp16")
+        r8 = simulate.simulate(reqs, cost, policy="fp8")
+        assert r8.duration_s <= r16.duration_s + 1e-6
+
+
+class TestControllerInvariants:
+    @settings(max_examples=50, deadline=None)
+    @given(st.lists(st.integers(1, 2000), min_size=1, max_size=100))
+    def test_mode_always_valid_and_dwell_respected(self, loads):
+        ctrl = DualPrecisionController(
+            SLOConfig(hysteresis_steps=4),
+            fp16_ms_per_token=0.5, fp8_ms_per_token=0.25)
+        fp8_run = 0
+        for tokens in loads:
+            m = ctrl.decide(StepObservation(tokens, 0, None))
+            assert m in ("fp16", "fp8")
+            if m == "fp8":
+                fp8_run += 1
+            else:
+                # must have dwelt at least hysteresis steps in fp8 (or
+                # never entered)
+                assert fp8_run == 0 or fp8_run >= ctrl.slo.hysteresis_steps
+                fp8_run = 0
+
+
+class TestQuantInvariants:
+    @settings(max_examples=60, deadline=None)
+    @given(st.lists(st.floats(-1e3, 1e3, allow_nan=False, width=32),
+                    min_size=4, max_size=128))
+    def test_act_quant_range_and_dequant_bound(self, vals):
+        x = jnp.asarray(np.asarray(vals, np.float32).reshape(1, -1))
+        q, s = quant.quantize_act_per_tensor(x)
+        qf = np.asarray(q, dtype=np.float32)
+        assert np.abs(qf).max() <= nf.E4M3_MAX
+        deq = qf * float(s)
+        amax = float(np.abs(np.asarray(x)).max())
+        # e4m3 relative error bound on the dequantized tensor
+        assert np.abs(deq - np.asarray(x)).max() <= max(amax / 8.0, 1e-6)
+
+    @settings(max_examples=60, deadline=None)
+    @given(st.integers(0, 2**31 - 1))
+    def test_per_token_scales_isolate_rows(self, seed):
+        r = np.random.RandomState(seed % (2**31))
+        x = np.ones((4, 32), np.float32)
+        x[0] *= r.uniform(100, 1000)          # one huge row
+        q, s = quant.quantize_act_per_token(jnp.asarray(x))
+        deq = np.asarray(q, np.float32) * np.asarray(s)
+        # small rows must not be crushed by the big row's scale
+        assert np.abs(deq[1:] - x[1:]).max() < 0.1
+
+
+class TestTraceInvariants:
+    @settings(max_examples=30, deadline=None)
+    @given(st.integers(0, 10_000))
+    def test_deterministic_and_sorted(self, seed):
+        a = trace.azure_like(duration_s=10, seed=seed)
+        b = trace.azure_like(duration_s=10, seed=seed)
+        assert [(r.arrival_s, r.prompt_len) for r in a] == \
+               [(r.arrival_s, r.prompt_len) for r in b]
+        times = [r.arrival_s for r in a]
+        assert times == sorted(times)
