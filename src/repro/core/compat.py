@@ -1,0 +1,43 @@
+"""Version guards for the JAX APIs this codebase uses across 0.4.x → 0.6.x.
+
+Installed JAX may be as old as 0.4.37, which lacks
+`jax.sharding.get_abstract_mesh`, `jax.sharding.AxisType`, and the
+`axis_types=` kwarg of `jax.make_mesh`. Callers go through these shims so
+the new-API path is taken when available and the legacy path (thread-local
+physical mesh, plain `Mesh` construction) otherwise.
+"""
+
+from __future__ import annotations
+
+import jax
+import numpy as np
+
+
+def get_ambient_mesh():
+    """The mesh visible at trace time: the abstract mesh on new JAX, the
+    thread-local physical mesh (set by `with mesh:`) on 0.4.x. Either way
+    the result exposes `.axis_names` and a dict-like `.shape`; with no
+    ambient mesh, `axis_names` is empty."""
+    get_abstract = getattr(jax.sharding, "get_abstract_mesh", None)
+    if get_abstract is not None:
+        return get_abstract()
+    from jax.interpreters import pxla
+    return pxla.thread_resources.env.physical_mesh
+
+
+def make_compat_mesh(shape, axis_names, *, devices=None):
+    """`jax.make_mesh` with explicit-Auto axis types where supported.
+
+    0.4.x `jax.make_mesh` has no `axis_types` kwarg (all axes are Auto
+    implicitly, which is exactly what we want); some very old versions
+    lack `jax.make_mesh` entirely, where a reshaped `Mesh` is equivalent."""
+    axis_type = getattr(jax.sharding, "AxisType", None)
+    make = getattr(jax, "make_mesh", None)
+    if make is not None:
+        if axis_type is not None:
+            return make(shape, axis_names, devices=devices,
+                        axis_types=(axis_type.Auto,) * len(axis_names))
+        return make(shape, axis_names, devices=devices)
+    devs = np.asarray(devices if devices is not None
+                      else jax.devices()[: int(np.prod(shape))])
+    return jax.sharding.Mesh(devs.reshape(shape), axis_names)

@@ -29,9 +29,11 @@ class SLOConfig:
 
 @dataclasses.dataclass
 class StepObservation:
-    batch_tokens: int                # tokens in this iteration's batch
+    batch_tokens: int                # decode tokens in this iteration's batch
     queue_depth: int                 # requests waiting
     measured_step_ms: float | None   # wall time of the last step
+    prefill_tokens: int = 0          # prompt-chunk tokens scheduled alongside
+                                     # decode (chunked prefill shares the step)
 
 
 class DualPrecisionController:
@@ -66,7 +68,10 @@ class DualPrecisionController:
             self._recent.append(obs.measured_step_ms)
 
         budget = self.slo.tpot_ms * self.slo.headroom
-        pred_fp16 = self.predict_step_ms(obs.batch_tokens, "fp16")
+        # chunked prefill rides the same iteration as decode, so its token
+        # budget stretches the step just like decode tokens do
+        pred_fp16 = self.predict_step_ms(
+            obs.batch_tokens + obs.prefill_tokens, "fp16")
         p90 = self._p90()
         overloaded = pred_fp16 > budget or (p90 is not None and p90 > budget)
 

@@ -83,6 +83,77 @@ def _attend(q_ref, k, v, lens_ref, o_ref, m_ref, l_ref, acc_ref, *,
                     / jnp.maximum(l_ref[...], 1e-30)).astype(o_ref.dtype)
 
 
+def _paged_kernel_fp16(tables_ref, lens_ref, q_ref, khi_ref, klo_ref,
+                       vhi_ref, vlo_ref, o_ref, m_ref, l_ref, acc_ref, *,
+                       n_blocks, block_c):
+    del tables_ref      # consumed by the index maps
+    _kernel_fp16(q_ref, khi_ref, klo_ref, vhi_ref, vlo_ref, lens_ref,
+                 o_ref, m_ref, l_ref, acc_ref,
+                 n_blocks=n_blocks, block_c=block_c)
+
+
+def _paged_kernel_fp8(tables_ref, lens_ref, q_ref, khi_ref, vhi_ref,
+                      o_ref, m_ref, l_ref, acc_ref, *, n_blocks, block_c):
+    del tables_ref
+    _kernel_fp8(q_ref, khi_ref, vhi_ref, lens_ref,
+                o_ref, m_ref, l_ref, acc_ref,
+                n_blocks=n_blocks, block_c=block_c)
+
+
+@functools.partial(jax.jit, static_argnames=("fp8", "interpret"))
+def paged_planar_decode_attention(q, k_hi, k_lo, v_hi, v_lo, tables, lens, *,
+                                  fp8: bool = False,
+                                  interpret: bool = False) -> jax.Array:
+    """Block-paged variant: q: (B, H, D); planes: (NB, BS, Hkv, D) uint8
+    physical pools (BS = KV block size, one grid step per block); tables:
+    (B, MB) int32 per-sequence block tables in logical order (holes point
+    at the trash block 0); lens: (B,) valid tokens per sequence.
+
+    Returns (B, H, D) f32. The block table rides scalar prefetch
+    (PrefetchScalarGridSpec) so each grid step's index_map DMAs the
+    RIGHT physical block — the kernel body is the same online-softmax
+    `_attend` as the dense-slot kernel, masking on logical positions.
+    In fp8 mode only the hi planes are touched (half the HBM traffic)."""
+    bsz, h, d = q.shape
+    bs_tok, hkv = k_hi.shape[1], k_hi.shape[2]
+    mb = tables.shape[1]
+    g = h // hkv
+    qg = q.reshape(bsz, hkv, g, d)
+    # pools laid out (NB, Hkv, BS, D) so one (block, head) tile is a
+    # contiguous DMA per grid step
+    planes = [p.transpose(0, 2, 1, 3) for p in (k_hi, k_lo, v_hi, v_lo)]
+
+    q_spec = pl.BlockSpec((1, 1, g, d), lambda b, hh, c, tab, ln: (b, hh, 0, 0))
+    c_spec = pl.BlockSpec((1, 1, bs_tok, d),
+                          lambda b, hh, c, tab, ln: (tab[b, c], hh, 0, 0))
+    out_spec = pl.BlockSpec((1, 1, g, d), lambda b, hh, c, tab, ln: (b, hh, 0, 0))
+    out_shape = jax.ShapeDtypeStruct((bsz, hkv, g, d), jnp.float32)
+    scratch = [pltpu.VMEM((g, 1), jnp.float32),
+               pltpu.VMEM((g, 1), jnp.float32),
+               pltpu.VMEM((g, d), jnp.float32)]
+
+    if fp8:
+        kernel = functools.partial(_paged_kernel_fp8, n_blocks=mb,
+                                   block_c=bs_tok)
+        ins = [planes[0], planes[2]]
+        in_specs = [q_spec, c_spec, c_spec]
+    else:
+        kernel = functools.partial(_paged_kernel_fp16, n_blocks=mb,
+                                   block_c=bs_tok)
+        ins = planes
+        in_specs = [q_spec, c_spec, c_spec, c_spec, c_spec]
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=2,
+        grid=(bsz, hkv, mb),
+        in_specs=in_specs,
+        out_specs=out_spec,
+        scratch_shapes=scratch)
+    out = pl.pallas_call(kernel, grid_spec=grid_spec, out_shape=out_shape,
+                         interpret=interpret)(
+        tables.astype(jnp.int32), lens.astype(jnp.int32), qg, *ins)
+    return out.reshape(bsz, h, d)
+
+
 @functools.partial(jax.jit,
                    static_argnames=("fp8", "block_c", "interpret"))
 def planar_decode_attention(q, k_hi, k_lo, v_hi, v_lo, lens, *,

@@ -14,6 +14,8 @@ from __future__ import annotations
 import jax
 import numpy as np
 
+from repro.core.compat import make_compat_mesh
+
 
 def make_production_mesh(*, multi_pod: bool = False):
     shape = (2, 16, 16) if multi_pod else (16, 16)
@@ -25,18 +27,15 @@ def make_production_mesh(*, multi_pod: bool = False):
             f"mesh {shape} needs {need} devices, have {len(devs)}; the "
             "dry-run must set XLA_FLAGS=--xla_force_host_platform_device_count"
             " before any jax import")
-    return jax.make_mesh(
-        shape, axes, devices=devs[:need],
-        axis_types=(jax.sharding.AxisType.Auto,) * len(axes))
+    return make_compat_mesh(shape, axes, devices=devs[:need])
 
 
 def make_debug_mesh(data: int = 2, model: int = 2):
     """Small mesh for sharding unit tests (run in a subprocess with a
     forced device count)."""
     need = data * model
-    return jax.make_mesh(
-        (data, model), ("data", "model"), devices=jax.devices()[:need],
-        axis_types=(jax.sharding.AxisType.Auto,) * 2)
+    return make_compat_mesh((data, model), ("data", "model"),
+                            devices=jax.devices()[:need])
 
 
 def data_axes(mesh) -> tuple[str, ...]:

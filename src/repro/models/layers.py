@@ -48,7 +48,8 @@ def shard_hint(x: jax.Array, *spec) -> jax.Array:
     """with_sharding_constraint that degrades to a no-op when there is no
     ambient mesh (tests/engine single-device) or any constrained dim does
     not divide its axis. spec entries: None / axis name / tuple of names."""
-    am = jax.sharding.get_abstract_mesh()
+    from repro.core.compat import get_ambient_mesh
+    am = get_ambient_mesh()
     names = getattr(am, "axis_names", ()) or ()
     if not names or len(spec) != x.ndim:
         return x
@@ -239,6 +240,30 @@ def _as_lens(kv_len, b):
     return kv_len
 
 
+def attn_core_paged(q, k, v, *, q_offset, kv_len, window=None):
+    """Chunked attention over a block-paged cache. q: (B,C,H,Dq) — C query
+    tokens per row (decode is the C=1 special case); k/v: (B,Cap,Hkv,·)
+    gathered from the physical pool in LOGICAL order via a block table,
+    so masking works on logical positions. q_offset: (B,) absolute
+    position of each row's first query; kv_len: (B,) valid keys per row
+    (the chunk's own k/v are already written). Positions beyond kv_len
+    hold trash-block garbage and are masked."""
+    b, c, h, dq = q.shape
+    cap, hkv = k.shape[1], k.shape[2]
+    g = h // hkv
+    qg = (q.reshape(b, c, hkv, g, dq) * (dq ** -0.5)).astype(jnp.float32)
+    s = jnp.einsum("bqhgd,bkhd->bhgqk", qg, k.astype(jnp.float32))
+    qpos = q_offset[:, None] + jnp.arange(c, dtype=jnp.int32)[None, :]
+    kpos = jnp.arange(cap, dtype=jnp.int32)
+    mask = kpos[None, None, :] <= qpos[..., None]           # (B,C,Cap) causal
+    mask &= kpos[None, None, :] < kv_len[:, None, None]
+    mask = _apply_window(mask, qpos[..., None], kpos[None, None, :], window)
+    s = jnp.where(mask[:, None, None], s, NEG_INF)
+    p = jax.nn.softmax(s, axis=-1)
+    o = jnp.einsum("bhgqk,bkhd->bqhgd", p, v.astype(jnp.float32))
+    return o.reshape(b, c, h, v.shape[-1])
+
+
 def attn_core_decode(q, k_cache, v_cache, kv_len, *, window=None):
     """One query token vs. fixed-capacity cache. q: (B,1,H,D),
     k/v_cache: (B,Cap,Hkv,·), kv_len: scalar or (B,) — per-row valid
@@ -295,13 +320,21 @@ def _qkv(rt, p, cfg, x, positions):
 
 def attention(rt: Runtime, p: dict, cfg, x: jax.Array, *,
               phase: str, positions: jax.Array, window=None,
-              cache: dict | None = None, kv_len=None, causal: bool = True):
-    """phase: 'train' | 'prefill' | 'decode'.
+              cache: dict | None = None, kv_len=None, causal: bool = True,
+              paged=None):
+    """phase: 'train' | 'prefill' | 'decode' | 'paged'.
 
     prefill returns (out, new_cache: {k,v} padded to cfg-determined capacity
     handled by caller); decode expects cache dict {k,v} with the write
     already NOT done — this function writes the new kv at kv_len position
     and returns (out, cache).
+
+    paged: (phys_write (B,C), phys_read (B,Cap), q_offset (B,)) flat
+    physical indices into the block pool (leaves shaped (NB, BS, Hkv, ·)).
+    The chunk's k/v are scattered at phys_write (pad/inactive columns
+    point at the trash block), then keys are gathered back in logical
+    order via phys_read — so chunked and monolithic prefill see
+    bit-identical key tensors.
     """
     b = x.shape[0]
     q, k, v = _qkv(rt, p, cfg, x, positions)
@@ -311,6 +344,43 @@ def attention(rt: Runtime, p: dict, cfg, x: jax.Array, *,
     elif phase == "prefill":
         o = attn_core_prefill(q, k, v, window=window)
         new_cache = {"k": k, "v": v}
+    elif phase == "paged":
+        phys_write, phys_read, q_offset = paged
+
+        def flat(a):     # (NB, BS, ...) pool -> (NB*BS, ...) flat view
+            return a.reshape(-1, *a.shape[2:])
+
+        wf = phys_write.reshape(-1)
+        if "k_hi" in cache:
+            # byte-planar NestedKV on paged blocks: write both planes,
+            # fp8 mode reads back only the hi plane (half the traffic)
+            from repro.core.nestedfp import e5m2_view, join_bytes, split_bytes
+            k_hi, k_lo = split_bytes(k)
+            v_hi, v_lo = split_bytes(v)
+            new_cache = {}
+            for name, val in (("k_hi", k_hi), ("k_lo", k_lo),
+                              ("v_hi", v_hi), ("v_lo", v_lo)):
+                fl = flat(cache[name]).at[wf].set(
+                    val.reshape(-1, *val.shape[2:]))
+                new_cache[name] = fl.reshape(cache[name].shape)
+            if rt.mode == "fp8":
+                kc = e5m2_view(flat(new_cache["k_hi"])[phys_read], jnp.float16)
+                vc = e5m2_view(flat(new_cache["v_hi"])[phys_read], jnp.float16)
+            else:
+                kc = join_bytes(flat(new_cache["k_hi"])[phys_read],
+                                flat(new_cache["k_lo"])[phys_read])
+                vc = join_bytes(flat(new_cache["v_hi"])[phys_read],
+                                flat(new_cache["v_lo"])[phys_read])
+        else:
+            kf = flat(cache["k"]).at[wf].set(
+                k.astype(cache["k"].dtype).reshape(-1, *k.shape[2:]))
+            vf = flat(cache["v"]).at[wf].set(
+                v.astype(cache["v"].dtype).reshape(-1, *v.shape[2:]))
+            new_cache = {"k": kf.reshape(cache["k"].shape),
+                         "v": vf.reshape(cache["v"].shape)}
+            kc, vc = kf[phys_read], vf[phys_read]
+        o = attn_core_paged(q, kc, vc, q_offset=q_offset,
+                            kv_len=_as_lens(kv_len, b), window=window)
     elif phase == "decode":
         lens = _as_lens(kv_len, b)
         rows = jnp.arange(b)

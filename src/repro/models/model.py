@@ -66,7 +66,7 @@ def init_decoder_block(key, cfg: ArchConfig, *, cross: bool = False) -> dict:
 def apply_decoder_block(rt: Runtime, p: dict, cfg: ArchConfig, x, *,
                         phase: str, positions, window=None, cache=None,
                         kv_len=None, memory=None, cross_cache=None,
-                        causal: bool = True):
+                        causal: bool = True, paged=None):
     """Returns (x, new_cache, new_cross_cache, aux)."""
     aux = {}
     h = L.rms_norm(x, p["ln1"], cfg.norm_eps)
@@ -77,7 +77,8 @@ def apply_decoder_block(rt: Runtime, p: dict, cfg: ArchConfig, x, *,
     else:
         a, new_cache = L.attention(rt, p["attn"], cfg, h, phase=phase,
                                    positions=positions, window=window,
-                                   cache=cache, kv_len=kv_len, causal=causal)
+                                   cache=cache, kv_len=kv_len, causal=causal,
+                                   paged=paged)
     x = x + a
     new_cross = None
     if "cross" in p:
@@ -165,6 +166,25 @@ def init_cache(cfg: ArchConfig, batch: int, capacity: int,
         return {"attn": _gqa_cache(cfg, cfg.n_layers, batch, capacity),
                 "cross": cross}
     raise ValueError(fam)
+
+
+def init_paged_cache(cfg: ArchConfig, n_total_blocks: int, block_size: int,
+                     planar: bool = False) -> dict:
+    """Block-paged GQA cache pytree: leaves (L, NB, BS, Hkv, Hd) with NO
+    batch dim — sequences own block ids, not rows (serving/kvcache.py
+    BlockManager; physical block 0 is the trash block). planar=True
+    stores byte planes (NestedKV on paged blocks)."""
+    if cfg.family not in ("dense", "moe", "vlm") or cfg.mla is not None:
+        raise ValueError(
+            f"paged KV supports GQA attention families only, not "
+            f"{cfg.family}/mla={cfg.mla is not None}")
+    hkv, hd = cfg.n_kv_heads, cfg.resolved_head_dim
+    shp = (cfg.n_layers, n_total_blocks, block_size, hkv, hd)
+    if planar:
+        return {"attn": {k: jnp.zeros(shp, jnp.uint8)
+                         for k in ("k_hi", "k_lo", "v_hi", "v_lo")}}
+    return {"attn": {"k": jnp.zeros(shp, CACHE_DTYPE),
+                     "v": jnp.zeros(shp, CACHE_DTYPE)}}
 
 
 def planarize_cache(caches: dict) -> dict:
@@ -335,7 +355,7 @@ def _run_hybrid_grouped(rt, stacked, cfg, x, *, phase, positions,
 
 def run_decoder_stack(rt, stacked, cfg, x, *, phase, positions, kv_len=None,
                       caches=None, memory=None, cross_caches=None,
-                      causal=True):
+                      causal=True, paged=None):
     """Scan the main decoder stack. caches/cross_caches are stacked (L, ...)."""
     windows = window_schedule(cfg)
     n_layers = jax.tree_util.tree_leaves(stacked)[0].shape[0]
@@ -348,7 +368,8 @@ def run_decoder_stack(rt, stacked, cfg, x, *, phase, positions, kv_len=None,
         h, new_c, new_cross, aux = apply_decoder_block(
             rt, p, cfg, h, phase=phase, positions=positions,
             window=xs.get("w"), cache=xs.get("c"), kv_len=kv_len,
-            memory=memory, cross_cache=xs.get("x"), causal=causal)
+            memory=memory, cross_cache=xs.get("x"), causal=causal,
+            paged=paged)
         ys = {}
         if new_c is not None:
             ys["c"] = new_c
@@ -592,8 +613,15 @@ def prefill(rt, params, cfg, batch, *, capacity: int | None = None,
     h, caches, _ = backbone(rt, params, cfg, h, phase="prefill",
                             positions=positions, memory=memory,
                             caches=caches_in)
-    pos = total - 1 if logit_position is None else n_prefix + logit_position
-    logits = lm_logits(rt, params, cfg, h[:, pos:pos + 1])[:, 0]
+    if logit_position is None:
+        hsel = h[:, total - 1: total]
+    else:
+        # logit_position may be a traced scalar (the engine passes it as an
+        # argument so its jit cache keys on (mode, bucket) alone — a static
+        # slice here forced one recompile per distinct prompt length)
+        pos = jnp.asarray(n_prefix + logit_position, jnp.int32)
+        hsel = jax.lax.dynamic_slice_in_dim(h, pos, 1, axis=1)
+    logits = lm_logits(rt, params, cfg, hsel)[:, 0]
 
     # pad prefill KV caches out to capacity
     if caches is not None and "attn" in caches:
@@ -607,6 +635,57 @@ def prefill(rt, params, cfg, batch, *, capacity: int | None = None,
         caches = dict(caches)
         caches["attn"] = jax.tree.map(pad_cache, caches["attn"])
     return logits, caches, total
+
+
+def paged_step(rt, params, cfg, tokens, caches, block_tables, *,
+               q_offset, kv_len, block_size: int, logit_position=None):
+    """One step over a block-paged cache — covers BOTH batched decode
+    (C=1 across all rows) and chunked prefill (one row, C=chunk tokens).
+
+    tokens:       (B, C) int32, right-padded chunks.
+    block_tables: (B, MB) int32 physical block ids in logical order
+                  (holes = trash block 0).
+    q_offset:     (B,) absolute position of tokens[:, 0].
+    kv_len:       (B,) valid cache tokens AFTER this chunk is written,
+                  i.e. q_offset + real_chunk_len (0 disables a row:
+                  all its writes go to the trash block).
+    logit_position: (B,) column of the last real token per row (traced —
+                  one compile per (mode, C) regardless of chunk fill).
+
+    Returns (logits (B, V), new caches). Pad columns write to the trash
+    block and their outputs are never read; chunked and monolithic
+    prefill therefore produce bit-identical logits for real tokens.
+    """
+    if cfg.family not in ("dense", "moe", "vlm") or cfg.mla is not None:
+        raise ValueError("paged_step serves GQA attention families only")
+    b, c = tokens.shape
+    tables = jnp.asarray(block_tables, jnp.int32)
+    q_offset = jnp.asarray(q_offset, jnp.int32)
+    kv_len = jnp.asarray(kv_len, jnp.int32)
+    mb = tables.shape[1]
+    positions = q_offset[:, None] + jnp.arange(c, dtype=jnp.int32)[None, :]
+    real = positions < kv_len[:, None]
+    blk = jnp.take_along_axis(
+        tables, jnp.clip(positions // block_size, 0, mb - 1), axis=1)
+    trash = jnp.arange(c, dtype=jnp.int32)[None, :] % block_size
+    phys_write = jnp.where(real, blk * block_size + positions % block_size,
+                           trash)
+    offs = jnp.arange(block_size, dtype=jnp.int32)
+    phys_read = (tables[:, :, None] * block_size
+                 + offs[None, None, :]).reshape(b, mb * block_size)
+
+    h = embed_tokens(rt, params, cfg, tokens)
+    h, new_attn, _, aux = run_decoder_stack(
+        rt, params["layers"], cfg, h, phase="paged", positions=positions,
+        kv_len=kv_len, caches=caches["attn"],
+        paged=(phys_write, phys_read, q_offset))
+    if logit_position is None:
+        hsel = h[:, -1:]
+    else:
+        lp = jnp.asarray(logit_position, jnp.int32)
+        hsel = jnp.take_along_axis(h, lp[:, None, None], axis=1)
+    logits = lm_logits(rt, params, cfg, hsel)[:, 0]
+    return logits, {"attn": new_attn}
 
 
 def decode_step(rt, params, cfg, tokens, caches, cache_len):

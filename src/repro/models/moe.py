@@ -45,8 +45,8 @@ def init_moe(key, cfg) -> dict:
 
 
 def _has_pod() -> bool:
-    import jax
-    am = jax.sharding.get_abstract_mesh()
+    from repro.core.compat import get_ambient_mesh
+    am = get_ambient_mesh()
     return "pod" in (getattr(am, "axis_names", ()) or ())
 
 

@@ -1,19 +1,32 @@
 """Continuous-batching serving engine with per-iteration dual precision.
 
-ORCA-style iteration-level scheduling: each engine step admits queued
-requests into free slots (prefill) and advances all active slots by one
-token (batched decode). The DualPrecisionController picks FP16 or FP8 per
-iteration; because NestedFP serves both precisions from the same
-weight buffers, the switch costs nothing — the engine simply dispatches
-to the other pre-compiled executable (paper §5.3 "per-iteration precision
-switching").
+ORCA-style iteration-level scheduling on a BLOCK-PAGED KV cache: each
+engine step (a) schedules prompt-prefill CHUNKS up to a bounded token
+budget — interleaved with decode so a long queued prompt no longer
+stalls every active decode's TPOT — and (b) advances all active slots by
+one token (batched decode). Admission is driven by free KV blocks rather
+than free slots; when decode growth exhausts the pool, the youngest
+sequence is preempted (blocks released, request requeued for recompute).
+The DualPrecisionController picks FP16 or FP8 per iteration; because
+NestedFP serves both precisions from the same weight buffers the switch
+costs nothing — the engine simply dispatches to the other pre-compiled
+executable (paper §5.3 "per-iteration precision switching"), and the
+measured wall time of every step feeds the controller's p90 tracker.
 
-Greedy sampling; prompt lengths are bucketed to limit prefill recompiles.
+GQA attention families (dense/moe/vlm, non-MLA) run the paged path —
+including the byte-planar NestedKV layout on paged blocks. SSM/hybrid/
+MLA cache families keep the legacy fixed-slot layout.
+
+Greedy sampling; chunk/prompt lengths are bucketed and jit caches key on
+(mode, bucket) with positions passed as traced arguments, so distinct
+prompt lengths share one executable per bucket.
 """
 
 from __future__ import annotations
 
+import collections
 import dataclasses
+import itertools
 import time
 from typing import Any, Callable
 
@@ -25,7 +38,7 @@ from repro.configs.base import ArchConfig
 from repro.core.policy import DualPrecisionController, StepObservation
 from repro.models import model as M
 from repro.models.layers import Runtime
-from repro.serving.kvcache import SlotManager
+from repro.serving.kvcache import BlockManager, SlotManager
 
 
 @dataclasses.dataclass
@@ -42,6 +55,16 @@ class Request:
     modes: list[str] = dataclasses.field(default_factory=list)
 
 
+@dataclasses.dataclass
+class _Prefill:
+    """In-flight chunked prefill. seq_tokens is the full token stream to
+    re-establish in the cache — prompt plus any output generated before a
+    preemption (greedy decoding makes the recompute continuation exact)."""
+    req: Request
+    seq_tokens: list[int]
+    done: int = 0
+
+
 def _bucket(n: int, minimum: int = 16) -> int:
     b = minimum
     while b < n:
@@ -54,73 +77,289 @@ class Engine:
                  capacity: int, controller: DualPrecisionController | None = None,
                  forced_mode: str | None = None, backend: str = "ref",
                  kv_planar: bool = False,
-                 clock: Callable[[], float] = time.monotonic):
+                 clock: Callable[[], float] = time.monotonic,
+                 paged: bool | None = None, block_size: int = 16,
+                 n_blocks: int | None = None, chunk_tokens: int = 256):
         self.cfg = cfg
         self.params = serving_params
-        self.slots = SlotManager(n_slots, capacity)
         self.controller = controller
         self.forced_mode = forced_mode
-        self.kv_planar = kv_planar and cfg.family in ("dense", "moe", "vlm") \
-            and cfg.mla is None
         self.clock = clock
-        self.queue: list[Request] = []
+        self.n_slots = n_slots
+        self.capacity = capacity
+        self.chunk_tokens = chunk_tokens
+        attn_ok = cfg.family in ("dense", "moe", "vlm") and cfg.mla is None
+        self.paged = attn_ok if paged is None else (bool(paged) and attn_ok)
+        self.kv_planar = kv_planar and attn_ok
+        self.queue: collections.deque[Request] = collections.deque()
         self.active: dict[int, Request] = {}
+        self.prefilling: dict[int, _Prefill] = {}
         self.finished: list[Request] = []
-        self.caches = M.init_cache(cfg, n_slots, capacity,
-                                   planar=self.kv_planar)
         self.lens = np.zeros(n_slots, np.int32)
+        self.stats = {"preemptions": 0, "chunks": 0, "chunk_tokens": 0,
+                      "peak_block_util": 0.0}
+        self._last_step_ms: float | None = None
         self._rts = {m: Runtime(mode=m, backend=backend, dtype=jnp.float32)
                      for m in ("fp16", "fp8")}
-        self._decode = {
-            m: jax.jit(lambda p, c, t, l, _m=m: M.decode_step(
-                self._rts[_m], p, cfg, t, c, l))
-            for m in ("fp16", "fp8")}
+        if self.paged:
+            self.block_size = block_size
+            mbs = -(-capacity // block_size)
+            if n_blocks is None:
+                n_blocks = n_slots * mbs     # dense-equivalent pool by default
+            self.slots = None
+            self.blocks = BlockManager(n_slots, block_size, n_blocks, mbs)
+            self.caches = M.init_paged_cache(
+                cfg, self.blocks.n_total_blocks, block_size,
+                planar=self.kv_planar)
+            self._decode = {
+                m: jax.jit(lambda p, c, t, tab, qo, kvl, _m=m: M.paged_step(
+                    self._rts[_m], p, cfg, t, c, tab, q_offset=qo,
+                    kv_len=kvl, block_size=block_size))
+                for m in ("fp16", "fp8")}
+        else:
+            self.slots = SlotManager(n_slots, capacity)
+            self.blocks = None
+            self.caches = M.init_cache(cfg, n_slots, capacity,
+                                       planar=self.kv_planar)
+            self._decode = {
+                m: jax.jit(lambda p, c, t, l, _m=m: M.decode_step(
+                    self._rts[_m], p, cfg, t, c, l))
+                for m in ("fp16", "fp8")}
         self._prefill_cache: dict[tuple[str, int], Any] = {}
+        self._chunk_cache: dict[tuple[str, int], Any] = {}
         self.iteration = 0
 
     # -- public API -----------------------------------------------------------
     def submit(self, req: Request) -> None:
+        if not req.tokens:
+            raise ValueError(f"request {req.request_id}: empty prompt")
         self.queue.append(req)
 
     def run(self, max_iters: int = 10_000) -> list[Request]:
-        while (self.queue or self.active) and self.iteration < max_iters:
+        while (self.queue or self.active or self.prefilling) \
+                and self.iteration < max_iters:
             self.step()
         return self.finished
 
-    # -- internals ------------------------------------------------------------
-    def _mode(self, batch_tokens: int) -> str:
+    def block_utilization(self) -> float:
+        return self.blocks.utilization() if self.paged else \
+            self.slots.utilization()
+
+    # -- mode selection -------------------------------------------------------
+    def _mode(self, decode_tokens: int, prefill_tokens: int) -> str:
         if self.forced_mode:
             return self.forced_mode
         if self.controller is None:
             return "fp16"
-        obs = StepObservation(batch_tokens=batch_tokens,
+        obs = StepObservation(batch_tokens=max(decode_tokens, 1),
                               queue_depth=len(self.queue),
-                              measured_step_ms=None)
+                              measured_step_ms=self._last_step_ms,
+                              prefill_tokens=prefill_tokens)
         return self.controller.decide(obs)
 
-    def _prefill_fn(self, mode: str, bucket: int, plen: int):
+    # -- step -----------------------------------------------------------------
+    def step(self) -> None:
+        self.iteration += 1
+        t0 = self.clock()
+        if self.paged:
+            plan = self._plan_chunks()
+            mode = self._mode(len(self.active),
+                              sum(take for _, _, take in plan))
+            for idx, start, take in plan:
+                self._run_chunk(mode, idx, start, take)
+            self._decode_paged(mode)
+            self.stats["peak_block_util"] = max(
+                self.stats["peak_block_util"], self.blocks.utilization())
+        else:
+            batch_tokens = len(self.active) + sum(
+                len(r.tokens) for r in itertools.islice(
+                    self.queue, self.slots.n_free()))
+            mode = self._mode(batch_tokens, 0)
+            self._admit_legacy(mode)
+            self._decode_legacy(mode)
+        # wall time of this step feeds the controller's p90 tracker on the
+        # NEXT decision (measured-latency fallback to FP8, paper §3.2)
+        self._last_step_ms = (self.clock() - t0) * 1e3
+
+    # =========================================================================
+    # paged path: chunked prefill + block-table decode
+    # =========================================================================
+    def _ensure_take(self, idx: int, start: int, want: int) -> int:
+        """Largest chunk <= want coverable by already-owned + free blocks."""
+        bm = self.blocks
+        avail = (len(bm.seqs[idx].blocks) + bm.n_free_blocks()) \
+            * bm.block_size - start
+        take = min(want, avail)
+        if take <= 0 or not bm.ensure(idx, start + take):
+            return 0
+        return take
+
+    def _plan_chunks(self) -> list[tuple[int, int, int]]:
+        """Schedule this step's prefill work: continue in-flight prefills
+        (oldest first), then admit queued requests while the chunk-token
+        budget, a slot, and enough free blocks for their WHOLE prompt are
+        available (the admission watermark — decode growth may still
+        preempt, but admissions never immediately thrash)."""
+        if self.cfg.family == "encdec":
+            raise NotImplementedError(
+                "engine serves decoder-only archs; enc-dec serving is "
+                "covered by the dry-run + benchmarks")
+        plan: list[tuple[int, int, int]] = []
+        budget = self.chunk_tokens
+        order = sorted(self.prefilling,
+                       key=lambda i: self.blocks.seqs[i].admitted)
+        for idx in order:
+            if budget <= 0:
+                break
+            st = self.prefilling[idx]
+            want = min(len(st.seq_tokens) - st.done, budget)
+            take = self._ensure_take(idx, st.done, want)
+            if take > 0:
+                plan.append((idx, st.done, take))
+                budget -= take
+        while budget > 0 and self.queue:
+            req = self.queue[0]
+            seq_tokens = req.tokens + req.output
+            idx = self.blocks.try_allocate(
+                req.request_id, len(seq_tokens),
+                req.max_new - len(req.output))
+            if idx is None:
+                break
+            self.queue.popleft()
+            st = _Prefill(req, seq_tokens)
+            self.prefilling[idx] = st
+            take = self._ensure_take(idx, 0, min(len(seq_tokens), budget))
+            plan.append((idx, 0, take))
+            budget -= take
+        return plan
+
+    def _chunk_fn(self, mode: str, bucket: int):
+        key = (mode, bucket)
+        if key not in self._chunk_cache:
+            rt, cfg, bs = self._rts[mode], self.cfg, self.block_size
+
+            def fn(p, caches, tokens, table, q_offset, kv_len, logit_pos):
+                return M.paged_step(rt, p, cfg, tokens, caches, table,
+                                    q_offset=q_offset, kv_len=kv_len,
+                                    block_size=bs, logit_position=logit_pos)
+            self._chunk_cache[key] = jax.jit(fn)
+        return self._chunk_cache[key]
+
+    def _run_chunk(self, mode: str, idx: int, start: int, take: int) -> None:
+        st = self.prefilling[idx]
+        bucket = _bucket(take)
+        toks = np.zeros((1, bucket), np.int32)
+        toks[0, :take] = st.seq_tokens[start: start + take]   # right-pad
+        logits, self.caches = self._chunk_fn(mode, bucket)(
+            self.params, self.caches, jnp.asarray(toks),
+            jnp.asarray(self.blocks.table(idx)[None]),
+            jnp.asarray([start], np.int32),
+            jnp.asarray([start + take], np.int32),
+            jnp.asarray([take - 1], np.int32))
+        st.done = start + take
+        self.blocks.set_length(idx, st.done)
+        self.stats["chunks"] += 1
+        self.stats["chunk_tokens"] += take
+        if st.done < len(st.seq_tokens):
+            return
+        # final chunk: the prompt's first generated token
+        req = st.req
+        req.output.append(int(np.asarray(jnp.argmax(logits, -1))[0]))
+        now = self.clock()
+        if req.first_token_s is None:
+            req.first_token_s = now
+        req.token_times.append(now)
+        req.modes.append(mode)
+        self.lens[idx] = len(st.seq_tokens)
+        self.active[idx] = req
+        del self.prefilling[idx]
+        self._maybe_retire(idx, now)
+
+    def _preempt(self, victim: int) -> None:
+        """vLLM-style recompute preemption: drop the victim's blocks and
+        requeue its request at the FRONT of the queue; on re-admission it
+        prefills prompt+generated-so-far and continues exactly."""
+        self.stats["preemptions"] += 1
+        if victim in self.active:
+            req = self.active.pop(victim)
+        else:
+            req = self.prefilling.pop(victim).req
+        self.blocks.release(victim)
+        self.lens[victim] = 0
+        self.queue.appendleft(req)
+
+    def _maybe_retire(self, idx: int, now: float) -> None:
+        req = self.active[idx]
+        # NOTE length >= capacity (not length+1): position `length` is the
+        # next write target, so a row is live while length < capacity —
+        # the old `+1` retired sequences one writable position early.
+        if len(req.output) >= req.max_new or self.lens[idx] >= self.capacity:
+            req.finished_s = now
+            self.finished.append(self.active.pop(idx))
+            self.blocks.release(idx)
+            self.lens[idx] = 0
+
+    def _decode_paged(self, mode: str) -> None:
+        # grow each active row's block table to cover the incoming write
+        # at position lens[idx]; preempt youngest sequences on exhaustion
+        for idx in sorted(self.active):
+            while idx in self.active \
+                    and not self.blocks.ensure(idx, int(self.lens[idx]) + 1):
+                victim = self.blocks.youngest()
+                if victim is None:
+                    raise RuntimeError("KV pool exhausted with nothing "
+                                       "preemptible")
+                self._preempt(victim)
+        if not self.active:
+            return
+        tokens = np.zeros((self.n_slots, 1), np.int32)
+        q_off = np.zeros(self.n_slots, np.int32)
+        kvl = np.zeros(self.n_slots, np.int32)   # 0 disables inactive rows
+        for idx, req in self.active.items():
+            tokens[idx, 0] = req.output[-1]
+            q_off[idx] = self.lens[idx]
+            kvl[idx] = self.lens[idx] + 1
+        logits, self.caches = self._decode[mode](
+            self.params, self.caches, jnp.asarray(tokens),
+            jnp.asarray(self.blocks.tables()), jnp.asarray(q_off),
+            jnp.asarray(kvl))
+        nxt = np.asarray(jnp.argmax(logits, -1))
+        now = self.clock()
+        for idx, req in list(self.active.items()):
+            self.lens[idx] += 1
+            self.blocks.set_length(idx, int(self.lens[idx]))
+            req.output.append(int(nxt[idx]))
+            req.token_times.append(now)
+            req.modes.append(mode)
+            self._maybe_retire(idx, now)
+
+    # =========================================================================
+    # legacy fixed-slot path (SSM/hybrid/MLA cache families)
+    # =========================================================================
+    def _prefill_fn(self, mode: str, bucket: int):
         """Prompts are RIGHT-padded to `bucket` for attention archs (causal
         masking makes the pad suffix invisible to real tokens; the pad
         region of the cache is masked out by per-slot lengths). SSM/hybrid
         state would absorb pad tokens, so those archs prefill at exact
-        length (bucket == plen)."""
-        key = (mode, bucket, plen)
+        length (bucket == plen). The logit position is a traced argument,
+        so the jit cache keys on (mode, bucket) alone."""
+        key = (mode, bucket)
         if key not in self._prefill_cache:
             rt = self._rts[mode]
             cfg = self.cfg
 
-            def fn(p, tokens):
+            def fn(p, tokens, logit_position):
                 logits, caches, _ = M.prefill(rt, p, cfg,
                                               {"tokens": tokens},
                                               capacity=self.slots.capacity,
-                                              logit_position=plen - 1)
+                                              logit_position=logit_position)
                 if self.kv_planar:
                     caches = M.planarize_cache(caches)
                 return logits, caches
             self._prefill_cache[key] = jax.jit(fn)
         return self._prefill_cache[key]
 
-    def _admit(self, mode: str) -> None:
+    def _admit_legacy(self, mode: str) -> None:
         if self.cfg.family == "encdec":
             raise NotImplementedError(
                 "engine serves decoder-only archs; enc-dec serving is "
@@ -132,13 +371,13 @@ class Engine:
                                           req.max_new)
             if idx is None:
                 return
-            self.queue.pop(0)
+            self.queue.popleft()
             plen = len(req.tokens)
             bucket = _bucket(plen) if pad_ok else plen
             toks = np.zeros((1, bucket), np.int32)
             toks[0, :plen] = req.tokens               # right-pad
-            logits, pc = self._prefill_fn(mode, bucket, plen)(
-                self.params, jnp.asarray(toks))
+            logits, pc = self._prefill_fn(mode, bucket)(
+                self.params, jnp.asarray(toks), jnp.int32(plen - 1))
             # install the prefilled caches into the slot
             self.caches = jax.tree.map(
                 lambda full, one: full.at[:, idx].set(
@@ -154,15 +393,10 @@ class Engine:
             self.active[idx] = req
             self.slots.slots[idx].generated = 1
 
-    def step(self) -> None:
-        self.iteration += 1
-        batch_tokens = len(self.active) + sum(
-            len(r.tokens) for r in self.queue[: self.slots.n_free()])
-        mode = self._mode(max(batch_tokens, 1))
-        self._admit(mode)
+    def _decode_legacy(self, mode: str) -> None:
         if not self.active:
             return
-        tokens = np.zeros((self.slots.n_slots, 1), np.int32)
+        tokens = np.zeros((self.n_slots, 1), np.int32)
         for idx, req in self.active.items():
             tokens[idx, 0] = req.output[-1]
         logits, self.caches = self._decode[mode](
@@ -179,8 +413,9 @@ class Engine:
             slot = self.slots.slots[idx]
             slot.generated += 1
             slot.length += 1
+            # length >= capacity, not length+1 (see _maybe_retire)
             if slot.generated >= req.max_new \
-                    or slot.length + 1 >= self.slots.capacity:
+                    or slot.length >= self.slots.capacity:
                 req.finished_s = now
                 done.append(idx)
         for idx in done:

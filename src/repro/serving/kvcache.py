@@ -1,12 +1,24 @@
-"""Slot-based KV cache manager for the continuous-batching engine.
+"""KV-cache managers for the continuous-batching engine.
 
-A fixed pool of `n_slots` sequence slots, each with `capacity` token
-positions, backed by the model's stacked cache pytree (batch dim = slot).
-Paged-attention-style block indirection is overkill for the engine's
-fixed-capacity slots; the manager instead tracks per-slot lengths and
-recycles slots on completion — the properties the paper's serving story
-needs (KV memory bounds the admissible batch; NestedFP's zero-overhead
-weights leave more HBM for these slots, paper §3.3).
+Two layouts:
+
+* `SlotManager` — legacy fixed-slot layout: a pool of `n_slots` sequence
+  slots, each pre-reserving `capacity` token positions in the model's
+  stacked cache pytree (batch dim = slot). Still used for cache families
+  without paged support (SSM state, MLA latents, enc-dec memories).
+
+* `BlockManager` — block-paged layout (the paper's §3.3 serving story:
+  KV memory bounds the admissible batch, so reserving `capacity` tokens
+  per slot wastes exactly the HBM that NestedFP's zero-overhead weights
+  reclaim). Physical KV lives in a pool of fixed-size token blocks;
+  each sequence owns an ordered block table and grows one block at a
+  time. Admission is driven by free blocks, not free slots, and when
+  blocks run out the youngest sequence is preempted (blocks released,
+  request recomputed later — vLLM-style recompute preemption).
+
+Physical block 0 is reserved as a trash block: jit'd steps always write
+a full (possibly padded) chunk, and pad/inactive-row writes are pointed
+at block 0 so they can never clobber live cache state.
 """
 
 from __future__ import annotations
@@ -56,3 +68,133 @@ class SlotManager:
     def utilization(self) -> float:
         used = sum(s.length for s in self.slots if not s.free)
         return used / (self.n_slots * self.capacity)
+
+
+TRASH_BLOCK = 0
+
+
+@dataclasses.dataclass
+class _Seq:
+    request_id: str
+    blocks: list[int]          # physical block ids, logical order
+    length: int = 0            # tokens committed to the cache
+    admitted: int = 0          # admission counter (largest == youngest)
+
+
+class BlockManager:
+    """Free-list allocator of fixed-size KV blocks with per-sequence
+    block tables.
+
+    `n_blocks` counts USABLE blocks; physical block 0 (trash) is extra,
+    so pools must be allocated with `n_total_blocks` blocks. Unassigned
+    block-table entries point at the trash block — reads through them
+    are masked by per-row lengths, writes land in garbage space.
+    """
+
+    def __init__(self, n_slots: int, block_size: int, n_blocks: int,
+                 max_blocks_per_seq: int):
+        assert block_size > 0 and n_blocks > 0
+        self.n_slots = n_slots
+        self.block_size = block_size
+        self.n_blocks = n_blocks
+        self.max_blocks_per_seq = max_blocks_per_seq
+        # pop() hands out low block ids first (deterministic layouts in tests)
+        self._free = list(range(n_blocks, 0, -1))
+        self.seqs: list[_Seq | None] = [None] * n_slots
+        self._admissions = 0
+
+    # -- pool-level views ------------------------------------------------------
+    @property
+    def n_total_blocks(self) -> int:
+        return self.n_blocks + 1                     # + trash block 0
+
+    @property
+    def capacity(self) -> int:
+        """Max tokens a single sequence can hold."""
+        return self.max_blocks_per_seq * self.block_size
+
+    def n_free_blocks(self) -> int:
+        return len(self._free)
+
+    def n_free_slots(self) -> int:
+        return sum(1 for s in self.seqs if s is None)
+
+    def blocks_in_use(self) -> int:
+        return self.n_blocks - len(self._free)
+
+    def utilization(self) -> float:
+        return self.blocks_in_use() / self.n_blocks
+
+    def table(self, idx: int):
+        """(max_blocks_per_seq,) int32 block table for one slot; holes
+        point at the trash block."""
+        import numpy as np
+        row = np.full(self.max_blocks_per_seq, TRASH_BLOCK, np.int32)
+        seq = self.seqs[idx]
+        if seq is not None:
+            row[: len(seq.blocks)] = seq.blocks
+        return row
+
+    def tables(self):
+        import numpy as np
+        return np.stack([self.table(i) for i in range(self.n_slots)])
+
+    # -- sequence lifecycle ----------------------------------------------------
+    def try_allocate(self, request_id: str, seq_len: int,
+                     max_new: int) -> int | None:
+        """Claim a slot for a sequence (no blocks yet — `ensure` grows
+        them chunk by chunk). None when no slot is free or when the
+        first chunk could not possibly be admitted (fewer free blocks
+        than the whole prompt needs — the admission watermark that keeps
+        preemption for decode-time growth, not thrashing admissions)."""
+        if seq_len + max_new > self.capacity:
+            raise ValueError(
+                f"request {request_id}: {seq_len}+{max_new} exceeds paged "
+                f"capacity {self.capacity}")
+        if -(-(seq_len + max_new) // self.block_size) > self.n_blocks:
+            raise ValueError(
+                f"request {request_id}: needs more blocks than the whole "
+                f"pool holds ({self.n_blocks}) — would preempt-thrash forever")
+        need = -(-max(seq_len, 1) // self.block_size)
+        if need > len(self._free):
+            return None
+        for i, s in enumerate(self.seqs):
+            if s is None:
+                self._admissions += 1
+                self.seqs[i] = _Seq(request_id, [], 0, self._admissions)
+                return i
+        return None
+
+    def ensure(self, idx: int, n_tokens: int) -> bool:
+        """Grow slot `idx`'s block table to cover positions [0, n_tokens).
+        All-or-nothing; False when the free list runs dry (caller
+        preempts or defers)."""
+        seq = self.seqs[idx]
+        assert seq is not None, idx
+        need = -(-n_tokens // self.block_size) - len(seq.blocks)
+        if need <= 0:
+            return True
+        if n_tokens > self.capacity or need > len(self._free):
+            return False
+        for _ in range(need):
+            seq.blocks.append(self._free.pop())
+        return True
+
+    def set_length(self, idx: int, n_tokens: int) -> None:
+        seq = self.seqs[idx]
+        assert seq is not None and n_tokens <= len(seq.blocks) * self.block_size
+        seq.length = n_tokens
+
+    def release(self, idx: int) -> None:
+        seq = self.seqs[idx]
+        if seq is None:
+            return
+        self._free.extend(reversed(seq.blocks))
+        self.seqs[idx] = None
+
+    def youngest(self) -> int | None:
+        """Slot of the most recently admitted live sequence (the
+        preemption victim), or None when nothing is live."""
+        live = [(s.admitted, i) for i, s in enumerate(self.seqs)
+                if s is not None]
+        return max(live)[1] if live else None

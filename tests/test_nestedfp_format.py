@@ -13,6 +13,7 @@ import jax
 import jax.numpy as jnp
 import ml_dtypes
 import pytest
+pytest.importorskip("hypothesis")  # optional dev dep: skip, not a collection error
 from hypothesis import given, settings, strategies as st
 
 from repro.core import nestedfp as nf

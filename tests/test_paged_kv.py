@@ -1,0 +1,317 @@
+"""Paged KV cache + chunked prefill: BlockManager invariants, chunked-vs-
+monolithic prefill bit-exactness, preemption correctness (recompute
+resumes exactly under greedy decoding), the paged planar decode kernel,
+and regression tests for the measured-p90 controller path and the
+capacity off-by-one."""
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+import pytest
+
+from repro.configs import ARCHS
+from repro.core import nestedfp as nf
+from repro.core.policy import DualPrecisionController, SLOConfig
+from repro.kernels.planar_decode_attention import paged_planar_decode_attention
+from repro.models import model as M
+from repro.models.convert import to_serving
+from repro.models.layers import Runtime, attn_core_decode
+from repro.serving.engine import Engine, Request
+from repro.serving.kvcache import TRASH_BLOCK, BlockManager
+
+
+@pytest.fixture(scope="module")
+def tiny():
+    cfg = ARCHS["qwen1.5-0.5b"].reduced()
+    params = M.init_params(jax.random.PRNGKey(0), cfg)
+    return cfg, to_serving(params)
+
+
+class TestBlockManager:
+    def test_allocate_extend_release_conserves_blocks(self):
+        bm = BlockManager(n_slots=2, block_size=4, n_blocks=8,
+                          max_blocks_per_seq=8)
+        a = bm.try_allocate("a", 6, 10)
+        assert a is not None and bm.n_free_blocks() == 8
+        assert bm.ensure(a, 6)                      # 2 blocks
+        assert bm.n_free_blocks() == 6
+        assert bm.ensure(a, 6)                      # idempotent
+        assert bm.n_free_blocks() == 6
+        assert bm.ensure(a, 9)                      # 3rd block
+        assert bm.n_free_blocks() == 5
+        bm.release(a)
+        assert bm.n_free_blocks() == 8 and bm.blocks_in_use() == 0
+
+    def test_trash_block_never_allocated(self):
+        bm = BlockManager(2, 4, 6, 8)
+        a = bm.try_allocate("a", 4, 4)
+        assert bm.ensure(a, 24)
+        assert TRASH_BLOCK not in bm.seqs[a].blocks
+        tab = bm.table(a)
+        assert (tab[:6] > 0).all() and (tab[6:] == TRASH_BLOCK).all()
+
+    def test_ensure_all_or_nothing(self):
+        bm = BlockManager(1, 4, 3, 8)
+        a = bm.try_allocate("a", 4, 4)
+        assert bm.ensure(a, 12)                     # all 3 blocks
+        assert not bm.ensure(a, 16)                 # pool dry
+        assert bm.n_free_blocks() == 0 and len(bm.seqs[a].blocks) == 3
+
+    def test_capacity_and_pool_guards(self):
+        bm = BlockManager(1, 4, 16, 4)              # per-seq cap 16 tokens
+        with pytest.raises(ValueError):
+            bm.try_allocate("a", 12, 8)             # 20 > 16
+        bm2 = BlockManager(1, 4, 2, 8)              # pool smaller than seq
+        with pytest.raises(ValueError):
+            bm2.try_allocate("a", 8, 8)             # 4 blocks > 2-block pool
+
+    def test_admission_watermark(self):
+        bm = BlockManager(4, 4, 4, 4)
+        a = bm.try_allocate("a", 12, 4)             # 3 of 4 blocks
+        assert bm.ensure(a, 12)
+        assert bm.try_allocate("b", 8, 4) is None   # needs 2, only 1 free
+        assert bm.try_allocate("c", 4, 4) is not None
+
+    def test_youngest_tracks_admission_order(self):
+        bm = BlockManager(3, 4, 12, 4)
+        a = bm.try_allocate("a", 4, 4)
+        b = bm.try_allocate("b", 4, 4)
+        assert bm.youngest() == b
+        bm.release(b)
+        assert bm.youngest() == a
+        c = bm.try_allocate("c", 4, 4)
+        assert bm.youngest() == c
+        bm.release(a), bm.release(c)
+        assert bm.youngest() is None
+
+
+class TestChunkedPrefill:
+    def test_chunked_matches_monolithic_bit_exact(self, tiny):
+        """FP16 logits of chunked prefill must be BIT-identical to a
+        single-chunk prefill: both round-trip K/V through the same f16
+        paged pool and gather keys in logical order, so chunking cannot
+        perturb the arithmetic."""
+        cfg, sparams = tiny
+        rt = Runtime(mode="fp16", backend="ref", dtype=jnp.float32)
+        bs, mb = 16, 4
+        prompt = list(range(5, 18))                 # 13 tokens, odd split
+        plen = len(prompt)
+        table = np.zeros((1, mb), np.int32)
+        table[0, 0], table[0, 1] = 1, 2
+
+        def run(chunks):
+            caches = M.init_paged_cache(cfg, n_total_blocks=9, block_size=bs)
+            out, start = None, 0
+            for take in chunks:
+                toks = np.zeros((1, 16), np.int32)
+                toks[0, :take] = prompt[start: start + take]
+                out, caches = M.paged_step(
+                    rt, sparams, cfg, jnp.asarray(toks), caches,
+                    jnp.asarray(table),
+                    q_offset=jnp.asarray([start], jnp.int32),
+                    kv_len=jnp.asarray([start + take], jnp.int32),
+                    block_size=bs,
+                    logit_position=jnp.asarray([take - 1], jnp.int32))
+                start += take
+            assert start == plen
+            return np.asarray(out)
+
+        mono = run([plen])
+        assert (run([4, 4, 5]) == mono).all()       # crosses a block boundary
+        assert (run([1] * plen) == mono).all()      # token-at-a-time
+
+    def test_engine_chunked_equals_unchunked(self, tiny):
+        cfg, sparams = tiny
+        prompts = [list(range(3, 40)), list(range(60, 75))]
+        outs = []
+        for chunk in (8, 512):
+            eng = Engine(cfg, sparams, n_slots=4, capacity=64,
+                         forced_mode="fp16", chunk_tokens=chunk)
+            for i, p in enumerate(prompts):
+                eng.submit(Request(f"r{i}", p, max_new=5))
+            outs.append({r.request_id: r.output for r in eng.run()})
+        assert outs[0] == outs[1]
+
+    def test_chunked_prefill_interleaves_with_decode(self, tiny):
+        """A long queued prompt must not stall active decodes: with a
+        small chunk budget, r0 keeps emitting tokens on iterations where
+        r1's prompt is still prefilling."""
+        cfg, sparams = tiny
+        eng = Engine(cfg, sparams, n_slots=4, capacity=128,
+                     forced_mode="fp16", chunk_tokens=8)
+        eng.submit(Request("r0", list(range(4, 12)), max_new=12))
+        eng.step()                                  # r0 prefilled + admitted
+        eng.submit(Request("r1", list(range(2, 66)), max_new=2))  # 64 tokens
+        decoded_during_prefill = 0
+        while eng.prefilling or eng.queue:
+            n0 = len(eng.active[0].output) if 0 in eng.active else None
+            eng.step()
+            if n0 is not None and 0 in eng.active \
+                    and len(eng.active[0].output) > n0:
+                decoded_during_prefill += 1
+        assert decoded_during_prefill >= 3, \
+            "decode stalled while the long prompt prefilled"
+        fin = {r.request_id: r for r in eng.run()}
+        assert len(fin["r0"].output) == 12 and len(fin["r1"].output) == 2
+
+
+class TestPreemption:
+    def test_forced_preemption_completes_all_requests(self, tiny):
+        """Scarce pool forces decode-growth preemption; recompute must
+        resume exactly — outputs identical to an ample-pool run."""
+        cfg, sparams = tiny
+        prompts = [list(range(4, 12)), list(range(30, 38)),
+                   list(range(90, 98))]
+
+        def run(n_blocks):
+            eng = Engine(cfg, sparams, n_slots=3, capacity=32,
+                         forced_mode="fp16", block_size=4,
+                         n_blocks=n_blocks)
+            for i, p in enumerate(prompts):
+                eng.submit(Request(f"r{i}", p, max_new=16))
+            fin = {r.request_id: r.output for r in eng.run()}
+            assert eng.blocks.n_free_blocks() == eng.blocks.n_blocks
+            return fin, eng.stats["preemptions"]
+
+        ample, p0 = run(n_blocks=24)                # 3 seqs * 6 blocks
+        scarce, p1 = run(n_blocks=10)
+        assert p0 == 0 and p1 >= 1, (p0, p1)
+        assert ample == scarce, "preemption changed generated tokens"
+        assert all(len(o) == 16 for o in scarce.values())
+
+    def test_admission_is_block_driven(self, tiny):
+        """Free slots alone no longer admit: a queued request waits until
+        blocks free up, then completes."""
+        cfg, sparams = tiny
+        eng = Engine(cfg, sparams, n_slots=4, capacity=32,
+                     forced_mode="fp16", block_size=4, n_blocks=8)
+        eng.submit(Request("big", list(range(4, 28)), max_new=4))  # 6 blocks
+        eng.step()
+        assert 0 in {**eng.active, **eng.prefilling}
+        eng.submit(Request("waits", list(range(50, 62)), max_new=4))  # 3 blocks
+        eng.step()
+        assert len(eng.queue) == 1, "admitted without blocks for its prompt"
+        fin = {r.request_id: r for r in eng.run()}
+        assert set(fin) == {"big", "waits"}
+        assert all(len(r.output) == 4 for r in fin.values())
+
+
+class TestPagedPlanarKernel:
+    def _pool_from_logical(self, rng, b, cap, hkv, d, bs, mb, nb):
+        k = jnp.asarray(rng.randn(b, cap, hkv, d).astype(np.float16))
+        v = jnp.asarray(rng.randn(b, cap, hkv, d).astype(np.float16))
+        tables = np.zeros((b, mb), np.int32)
+        ids = list(range(1, nb))
+        rng.shuffle(ids)
+        pool_k = np.zeros((nb, bs, hkv, d), np.float16)
+        pool_v = np.zeros((nb, bs, hkv, d), np.float16)
+        t = 0
+        for bb in range(b):
+            for m in range(mb):
+                pid = ids[t]
+                t += 1
+                tables[bb, m] = pid
+                pool_k[pid] = np.asarray(k[bb, m * bs: (m + 1) * bs])
+                pool_v[pid] = np.asarray(v[bb, m * bs: (m + 1) * bs])
+        return k, v, jnp.asarray(tables), jnp.asarray(pool_k), jnp.asarray(pool_v)
+
+    @pytest.mark.parametrize("shape", [(2, 8, 4, 64), (1, 16, 2, 64)])
+    def test_fp16_matches_oracle_through_shuffled_pool(self, shape):
+        b, h, hkv, d = shape
+        bs, mb = 128, 4
+        nb = b * mb + 1
+        rng = np.random.RandomState(11)
+        cap = mb * bs
+        q = jnp.asarray(rng.randn(b, h, d).astype(np.float16))
+        k, v, tables, pk, pv = self._pool_from_logical(
+            rng, b, cap, hkv, d, bs, mb, nb)
+        lens = jnp.asarray(rng.randint(1, cap, b), jnp.int32)
+        k_hi, k_lo = nf.split_bytes(pk)
+        v_hi, v_lo = nf.split_bytes(pv)
+        got = paged_planar_decode_attention(q, k_hi, k_lo, v_hi, v_lo,
+                                            tables, lens, interpret=True)
+        want = attn_core_decode(q[:, None], k, v, lens)[:, 0]
+        np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                                   rtol=2e-3, atol=2e-3)
+
+    def test_fp8_reads_hi_plane_only(self):
+        b, h, hkv, d = 2, 8, 4, 64
+        bs, mb = 128, 2
+        nb = b * mb + 1
+        rng = np.random.RandomState(5)
+        cap = mb * bs
+        q = jnp.asarray(rng.randn(b, h, d).astype(np.float16))
+        k, v, tables, pk, pv = self._pool_from_logical(
+            rng, b, cap, hkv, d, bs, mb, nb)
+        lens = jnp.asarray([cap, 37], jnp.int32)
+        k_hi, k_lo = nf.split_bytes(pk)
+        v_hi, v_lo = nf.split_bytes(pv)
+        got = paged_planar_decode_attention(q, k_hi, k_lo, v_hi, v_lo,
+                                            tables, lens, fp8=True,
+                                            interpret=True)
+        k8 = nf.e5m2_view(nf.split_bytes(k)[0], jnp.float16)
+        v8 = nf.e5m2_view(nf.split_bytes(v)[0], jnp.float16)
+        want = attn_core_decode(q[:, None], k8, v8, lens)[:, 0]
+        np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                                   rtol=2e-3, atol=2e-3)
+
+
+class _FakeClock:
+    def __init__(self):
+        self.t, self.dt = 0.0, 0.0
+
+    def __call__(self):
+        self.t += self.dt
+        return self.t
+
+
+class TestEngineRegressions:
+    def test_measured_p90_enters_and_exits_fp8(self, tiny):
+        """engine.py used to pass measured_step_ms=None, so the
+        controller's p90 fallback was dead code. With wall time recorded,
+        slow measured steps must force FP8 and fast ones must release it
+        — even though the PREDICTED cost never breaches the SLO."""
+        cfg, sparams = tiny
+        ctrl = DualPrecisionController(
+            SLOConfig(tpot_ms=33.3, hysteresis_steps=2),
+            fp16_ms_per_token=1e-4, fp8_ms_per_token=5e-5,
+            fixed_overhead_ms=0.0)
+        clock = _FakeClock()
+        eng = Engine(cfg, sparams, n_slots=2, capacity=128,
+                     controller=ctrl, clock=clock)
+        eng.submit(Request("r0", list(range(5, 13)), max_new=100))
+        while eng.queue or eng.active or eng.prefilling:
+            # each step makes a handful of clock calls; 20 ms per call
+            # puts measured step time far beyond the 30 ms budget
+            clock.dt = 0.020 if eng.iteration < 20 else 1e-7
+            eng.step()
+        assert "fp8" in ctrl.history, "measured p90 never engaged FP8"
+        assert ctrl.history[-1] == "fp16", "never recovered from FP8"
+        assert len(eng.finished) == 1 and len(eng.finished[0].output) == 100
+
+    @pytest.mark.parametrize("paged", [True, False])
+    def test_capacity_boundary_not_truncated(self, tiny, paged):
+        """prompt+max_new == capacity must yield ALL max_new tokens; the
+        old `length + 1 >= capacity` retire check cut the last one."""
+        cfg, sparams = tiny
+        eng = Engine(cfg, sparams, n_slots=2, capacity=32,
+                     forced_mode="fp16", paged=paged)
+        eng.submit(Request("r0", list(range(4, 12)), max_new=24))   # 8+24=32
+        fin = eng.run()
+        assert len(fin) == 1
+        assert len(fin[0].output) == 24, \
+            f"truncated at capacity: got {len(fin[0].output)}/24"
+
+    def test_empty_prompt_rejected(self, tiny):
+        cfg, sparams = tiny
+        eng = Engine(cfg, sparams, n_slots=2, capacity=32,
+                     forced_mode="fp16")
+        with pytest.raises(ValueError, match="empty prompt"):
+            eng.submit(Request("r0", [], max_new=4))
+
+    def test_queue_is_a_deque(self, tiny):
+        cfg, sparams = tiny
+        import collections
+        eng = Engine(cfg, sparams, n_slots=2, capacity=32,
+                     forced_mode="fp16")
+        assert isinstance(eng.queue, collections.deque)

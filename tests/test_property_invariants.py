@@ -4,6 +4,8 @@ conservation laws, quantizer bounds, trace determinism."""
 
 import numpy as np
 import jax.numpy as jnp
+import pytest
+pytest.importorskip("hypothesis")  # optional dev dep: skip, not a collection error
 from hypothesis import given, settings, strategies as st
 
 from repro.core import nestedfp as nf

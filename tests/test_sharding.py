@@ -161,10 +161,10 @@ from repro.launch import sharding as sh, steps
 from repro.models import model as M
 from repro.models.layers import Runtime
 from repro.models.convert import to_serving
+from repro.core.compat import make_compat_mesh
 
 cfg = ARCHS["qwen1.5-0.5b"].reduced()
-mesh = jax.make_mesh((2, 4), ("data", "model"), devices=jax.devices(),
-                     axis_types=(jax.sharding.AxisType.Auto,) * 2)
+mesh = make_compat_mesh((2, 4), ("data", "model"), devices=jax.devices())
 params = M.init_params(jax.random.PRNGKey(0), cfg)
 sp = to_serving(params)
 p_shard = sh.tree_shardings(jax.eval_shape(lambda: sp), mesh, sh.param_spec, cfg)
