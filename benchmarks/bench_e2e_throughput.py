@@ -71,6 +71,7 @@ def measured(n_requests: int = 8) -> list[dict]:
             fin = eng.run()
             dt = time.perf_counter() - t0
             toks = sum(len(r.output) for r in fin)
+            ps = eng.prefix_cache_stats()
             rows.append({"name": f"e2e_measured_cpu/{mode}{tag}",
                          "tokens": toks, "seconds": round(dt, 2),
                          "tok_s": round(toks / dt, 1),
@@ -78,7 +79,9 @@ def measured(n_requests: int = 8) -> list[dict]:
                          "peak_block_util": round(
                              eng.stats["peak_block_util"], 3),
                          "preemptions": eng.stats["preemptions"],
-                         "prefill_chunks": eng.stats["chunks"]})
+                         "prefill_chunks": eng.stats["chunks"],
+                         "prefix_hit_rate": round(ps["hit_rate"], 3),
+                         "blocks_saved": ps["blocks_saved"]})
     return rows
 
 

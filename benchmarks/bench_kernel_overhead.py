@@ -58,8 +58,48 @@ def _timed(fn, *args, reps=3) -> float:
     return (time.perf_counter() - t0) / reps * 1e6
 
 
+def block_table_overhead(n_slots: int = 64, blocks_per_seq: int = 64,
+                         reps: int = 200) -> dict:
+    """Per-decode-step cost of materializing the (n_slots, max_blocks)
+    block-table array: the old code rebuilt it in Python (np.full + row
+    fills) every step; BlockManager now keeps one persistent array
+    updated incrementally in ensure/release/fork, so `tables()` is a
+    return of a maintained buffer."""
+    from repro.serving.kvcache import TRASH_BLOCK, BlockManager
+
+    n_blocks = n_slots * blocks_per_seq
+    bm = BlockManager(n_slots, 16, n_blocks, blocks_per_seq)
+    for i in range(n_slots):
+        idx = bm.try_allocate(f"r{i}", 16 * blocks_per_seq, 0)
+        bm.ensure(idx, 16 * blocks_per_seq)
+
+    def rebuild():                      # the replaced per-step code path
+        rows = []
+        for i in range(n_slots):
+            row = np.full(blocks_per_seq, TRASH_BLOCK, np.int32)
+            seq = bm.seqs[i]
+            if seq is not None:
+                row[: len(seq.blocks)] = seq.blocks
+            rows.append(row)
+        return np.stack(rows)
+
+    t0 = time.perf_counter()
+    for _ in range(reps):
+        rebuild()
+    t_rebuild = (time.perf_counter() - t0) / reps * 1e6
+    t0 = time.perf_counter()
+    for _ in range(reps):
+        bm.tables()
+    t_incr = (time.perf_counter() - t0) / reps * 1e6
+    assert (rebuild() == bm.tables()).all()
+    return {"name": f"kernel_overhead/block_tables_{n_slots}x{blocks_per_seq}",
+            "us_rebuild_per_step": round(t_rebuild, 2),
+            "us_incremental_per_step": round(t_incr, 2),
+            "speedup": round(t_rebuild / max(t_incr, 1e-9), 1)}
+
+
 def run(quick: bool = True) -> list[dict]:
-    rows = []
+    rows = [block_table_overhead()]
     rng = np.random.RandomState(0)
     shapes = list(PAPER_SHAPES.items())[:2] if quick else list(PAPER_SHAPES.items())
     ms = MS[:2] if quick else MS

@@ -26,16 +26,27 @@ ctrl = DualPrecisionController(SLOConfig(tpot_ms=33.3, hysteresis_steps=3),
 eng = Engine(cfg, sparams, n_slots=8, capacity=128, controller=ctrl)
 
 rng = np.random.RandomState(1)
+# every request opens with the same system prompt — the COW prefix cache
+# shares those KV blocks across the whole burst (one prefill, N readers)
+system_prompt = list(rng.randint(1, 500, 32))
 # light phase: 3 requests; burst: 12 at once; light again
 for i in range(3):
-    eng.submit(Request(f"light{i}", list(rng.randint(1, 500, 12)), max_new=6))
+    eng.submit(Request(f"light{i}",
+                       system_prompt + list(rng.randint(1, 500, 12)),
+                       max_new=6))
 eng.run(max_iters=40)
 for i in range(12):
-    eng.submit(Request(f"burst{i}", list(rng.randint(1, 500, 48)), max_new=8))
+    eng.submit(Request(f"burst{i}",
+                       system_prompt + list(rng.randint(1, 500, 48)),
+                       max_new=8))
 eng.run(max_iters=200)
 
 hist = ctrl.history
 print(f"iterations: {len(hist)}, fp16 fraction: {ctrl.fp16_time_fraction():.2f}")
 print("mode trace:", "".join("H" if m == "fp16" else "8" for m in hist))
 assert "fp8" in hist and "fp16" in hist, "controller must use both modes"
+ps = eng.prefix_cache_stats()
+print(f"prefix cache: hit rate {ps['hit_rate']:.2f}, "
+      f"blocks saved {ps['blocks_saved']}, cow forks {ps['cow_forks']}")
+assert ps["blocks_saved"] > 0, "shared system prompt never hit the cache"
 print("finished requests:", len(eng.finished))

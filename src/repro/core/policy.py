@@ -10,6 +10,13 @@ it estimates the next iteration's TPOT from a calibrated per-token cost
 model and the current batch, and falls back to FP8 whenever the estimate
 (or the recent measured p90) threatens the SLO. Hysteresis avoids
 oscillation on the boundary.
+
+Besides latency, KV **memory pressure** is a first-class FP8 trigger
+(MorphServe's runtime signal, arXiv 2506.02006): when the paged engine's
+free-block headroom drops below `free_block_frac_min`, imminent
+preemptions threaten TPOT far more than the compute itself, so the
+controller drops to FP8 early — the same hysteresis dwell governs the
+return to FP16 once headroom recovers.
 """
 
 from __future__ import annotations
@@ -25,6 +32,7 @@ class SLOConfig:
     headroom: float = 0.9            # act before the SLO is breached
     hysteresis_steps: int = 5        # min FP8 dwell before returning to FP16
     p90_window: int = 64             # measured-latency window
+    free_block_frac_min: float = 0.1 # KV headroom below this forces FP8
 
 
 @dataclasses.dataclass
@@ -34,6 +42,9 @@ class StepObservation:
     measured_step_ms: float | None   # wall time of the last step
     prefill_tokens: int = 0          # prompt-chunk tokens scheduled alongside
                                      # decode (chunked prefill shares the step)
+    free_block_frac: float | None = None
+                                     # allocatable fraction of the paged KV
+                                     # pool (None: engine is not paged)
 
 
 class DualPrecisionController:
@@ -73,7 +84,13 @@ class DualPrecisionController:
         pred_fp16 = self.predict_step_ms(
             obs.batch_tokens + obs.prefill_tokens, "fp16")
         p90 = self._p90()
-        overloaded = pred_fp16 > budget or (p90 is not None and p90 > budget)
+        # free-block headroom is a leading indicator: exhaustion means
+        # preemption-and-recompute, which costs far more than the step
+        mem_pressure = (obs.free_block_frac is not None
+                        and obs.free_block_frac < self.slo.free_block_frac_min)
+        overloaded = (pred_fp16 > budget
+                      or (p90 is not None and p90 > budget)
+                      or mem_pressure)
 
         if overloaded:
             self.mode = "fp8"

@@ -24,6 +24,10 @@ def main() -> int:
     ap.add_argument("--slots", type=int, default=8)
     ap.add_argument("--capacity", type=int, default=256)
     ap.add_argument("--prompt-len", type=int, default=32)
+    ap.add_argument("--system-prompt-len", type=int, default=0,
+                    help="shared prefix tokens prepended to every request "
+                         "(exercises COW prefix caching)")
+    ap.add_argument("--no-prefix-cache", action="store_true")
     ap.add_argument("--max-new", type=int, default=16)
     ap.add_argument("--policy", default="dual",
                     choices=["dual", "fp16", "fp8"])
@@ -58,20 +62,27 @@ def main() -> int:
         forced = args.policy
 
     eng = Engine(cfg, sparams, n_slots=args.slots, capacity=args.capacity,
-                 controller=controller, forced_mode=forced)
+                 controller=controller, forced_mode=forced,
+                 prefix_cache=not args.no_prefix_cache)
     rng = np.random.RandomState(args.seed)
+    sys_prompt = list(rng.randint(1, cfg.vocab_size,
+                                  args.system_prompt_len))
     for i in range(args.requests):
         plen = max(4, int(rng.normal(args.prompt_len, 4)))
-        eng.submit(Request(f"r{i}", list(rng.randint(1, cfg.vocab_size,
-                                                     plen)),
+        eng.submit(Request(f"r{i}",
+                           sys_prompt + list(rng.randint(1, cfg.vocab_size,
+                                                         plen)),
                            max_new=args.max_new))
     fin = eng.run()
     n_tokens = sum(len(r.output) for r in fin)
     modes = [m for r in fin for m in r.modes]
+    ps = eng.prefix_cache_stats()
     print(json.dumps({
         "finished": len(fin), "tokens": n_tokens,
         "iterations": eng.iteration,
         "fp16_fraction": modes.count("fp16") / max(len(modes), 1),
+        "prefix_hit_rate": round(ps["hit_rate"], 3),
+        "blocks_saved": ps["blocks_saved"],
     }))
     return 0 if len(fin) == args.requests else 1
 

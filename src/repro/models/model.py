@@ -655,6 +655,14 @@ def paged_step(rt, params, cfg, tokens, caches, block_tables, *,
     Returns (logits (B, V), new caches). Pad columns write to the trash
     block and their outputs are never read; chunked and monolithic
     prefill therefore produce bit-identical logits for real tokens.
+
+    Block tables may alias: several rows (or several sequences across
+    steps) may point at the SAME physical blocks — COW prefix caching
+    shares full prompt-prefix blocks read-only. Reads gather keys per
+    row in logical order via `phys_read`, so sharing is transparent
+    here and in the planar decode kernel; the caller (engine/kvcache)
+    guarantees writes only ever target unshared blocks by COW-forking
+    before the step runs.
     """
     if cfg.family not in ("dense", "moe", "vlm") or cfg.mla is not None:
         raise ValueError("paged_step serves GQA attention families only")

@@ -17,6 +17,21 @@ GQA attention families (dense/moe/vlm, non-MLA) run the paged path —
 including the byte-planar NestedKV layout on paged blocks. SSM/hybrid/
 MLA cache families keep the legacy fixed-slot layout.
 
+Copy-on-write prefix caching (paged path, on by default): at admission
+the engine matches the longest cached full-block prefix of the request's
+token stream (kvcache.py chain-hash index), attaches those blocks with
+zero recompute, and starts chunked prefill at the matched offset —
+always recomputing at least the final prompt token so the first-token
+logit is produced. Before any chunk or decode write lands, shared
+write-target blocks are COW-forked (`cow_for_write`) and their bytes
+copied in the physical pool by one jitted block-copy; retire/preempt
+decref blocks instead of freeing them, parking reusable prefixes in an
+LRU pool that is reclaimed before preemption ever triggers. The paged
+attention read path gathers keys through the block table in logical
+order, so shared physical blocks are transparent to `paged_step` and the
+planar decode kernel alike. `prefix_cache_stats()` reports hit-rate and
+blocks saved.
+
 Greedy sampling; chunk/prompt lengths are bucketed and jit caches key on
 (mode, bucket) with positions passed as traced arguments, so distinct
 prompt lengths share one executable per bucket.
@@ -79,7 +94,8 @@ class Engine:
                  kv_planar: bool = False,
                  clock: Callable[[], float] = time.monotonic,
                  paged: bool | None = None, block_size: int = 16,
-                 n_blocks: int | None = None, chunk_tokens: int = 256):
+                 n_blocks: int | None = None, chunk_tokens: int = 256,
+                 prefix_cache: bool = True):
         self.cfg = cfg
         self.params = serving_params
         self.controller = controller
@@ -107,10 +123,18 @@ class Engine:
             if n_blocks is None:
                 n_blocks = n_slots * mbs     # dense-equivalent pool by default
             self.slots = None
-            self.blocks = BlockManager(n_slots, block_size, n_blocks, mbs)
+            self.blocks = BlockManager(n_slots, block_size, n_blocks, mbs,
+                                       prefix_cache=prefix_cache)
             self.caches = M.init_paged_cache(
                 cfg, self.blocks.n_total_blocks, block_size,
                 planar=self.kv_planar)
+            # one compile: src/dst are traced scalars into the block axis;
+            # donating the cache lets XLA update the one block in place
+            # instead of materializing a whole-pool copy per COW fork
+            self._copy_block = jax.jit(
+                lambda c, s, d: jax.tree.map(
+                    lambda a: a.at[:, d].set(a[:, s]), c),
+                donate_argnums=(0,))
             self._decode = {
                 m: jax.jit(lambda p, c, t, tab, qo, kvl, _m=m: M.paged_step(
                     self._rts[_m], p, cfg, t, c, tab, q_offset=qo,
@@ -145,8 +169,24 @@ class Engine:
         return self.blocks.utilization() if self.paged else \
             self.slots.utilization()
 
+    def prefix_cache_stats(self) -> dict:
+        """Prefix-cache effectiveness: hit rate over prompt tokens looked
+        up at admission, blocks saved by sharing, COW forks, LRU churn."""
+        if not self.paged:
+            return {"hit_rate": 0.0, "blocks_saved": 0, "hit_tokens": 0,
+                    "cached_blocks": 0, "cow_forks": 0, "evictions": 0}
+        ps = self.blocks.prefix_stats
+        denom = ps["lookup_tokens"]
+        return {"hit_rate": ps["hit_tokens"] / denom if denom else 0.0,
+                "hit_tokens": ps["hit_tokens"],
+                "blocks_saved": ps["blocks_shared"],
+                "cached_blocks": self.blocks.n_cached_blocks(),
+                "cow_forks": ps["cow_forks"],
+                "evictions": ps["evictions"]}
+
     # -- mode selection -------------------------------------------------------
-    def _mode(self, decode_tokens: int, prefill_tokens: int) -> str:
+    def _mode(self, decode_tokens: int, prefill_tokens: int,
+              free_block_frac: float | None = None) -> str:
         if self.forced_mode:
             return self.forced_mode
         if self.controller is None:
@@ -154,7 +194,8 @@ class Engine:
         obs = StepObservation(batch_tokens=max(decode_tokens, 1),
                               queue_depth=len(self.queue),
                               measured_step_ms=self._last_step_ms,
-                              prefill_tokens=prefill_tokens)
+                              prefill_tokens=prefill_tokens,
+                              free_block_frac=free_block_frac)
         return self.controller.decide(obs)
 
     # -- step -----------------------------------------------------------------
@@ -164,12 +205,15 @@ class Engine:
         if self.paged:
             plan = self._plan_chunks()
             mode = self._mode(len(self.active),
-                              sum(take for _, _, take in plan))
+                              sum(take for _, _, take in plan),
+                              free_block_frac=self.blocks.free_block_frac())
             for idx, start, take in plan:
-                self._run_chunk(mode, idx, start, take)
+                # a COW-fork failure inside an earlier chunk may have
+                # preempted a later plan entry — skip stale entries
+                if idx in self.prefilling:
+                    self._run_chunk(mode, idx, start, take)
             self._decode_paged(mode)
-            self.stats["peak_block_util"] = max(
-                self.stats["peak_block_util"], self.blocks.utilization())
+            self._sample_peak()
         else:
             batch_tokens = len(self.active) + sum(
                 len(r.tokens) for r in itertools.islice(
@@ -222,15 +266,26 @@ class Engine:
             seq_tokens = req.tokens + req.output
             idx = self.blocks.try_allocate(
                 req.request_id, len(seq_tokens),
-                req.max_new - len(req.output))
+                req.max_new - len(req.output),
+                cached_blocks=self.blocks.prefix_admit_discount(seq_tokens))
             if idx is None:
                 break
             self.queue.popleft()
-            st = _Prefill(req, seq_tokens)
+            # longest cached full-block prefix is shared (incref, zero
+            # recompute); prefill starts at the matched offset but always
+            # recomputes >= 1 token so the first-token logit is produced
+            # (cow_for_write forks the tail block if that write would
+            # land in a shared one)
+            matched = self.blocks.attach_prefix(idx, seq_tokens)
+            start = min(matched, len(seq_tokens) - 1)
+            self.blocks.set_length(idx, start)
+            st = _Prefill(req, seq_tokens, done=start)
             self.prefilling[idx] = st
-            take = self._ensure_take(idx, 0, min(len(seq_tokens), budget))
-            plan.append((idx, 0, take))
-            budget -= take
+            take = self._ensure_take(
+                idx, start, min(len(seq_tokens) - start, budget))
+            if take > 0:
+                plan.append((idx, start, take))
+                budget -= take
         return plan
 
     def _chunk_fn(self, mode: str, bucket: int):
@@ -245,8 +300,38 @@ class Engine:
             self._chunk_cache[key] = jax.jit(fn)
         return self._chunk_cache[key]
 
+    def _apply_cow(self, pairs: list[tuple[int, int]]) -> None:
+        """Materialize COW forks: copy each forked block's bytes in the
+        physical pool (single jitted scatter, src/dst traced)."""
+        for src, dst in pairs:
+            self.caches = self._copy_block(
+                self.caches, jnp.int32(src), jnp.int32(dst))
+
+    def _cow_or_preempt(self, idx: int, start: int, end: int) -> bool:
+        """Fork shared blocks covering the write range [start, end);
+        preempt youngest sequences while the pool is too exhausted to
+        fork. False when `idx` itself got preempted."""
+        pairs = self.blocks.cow_for_write(idx, start, end)
+        while pairs is None:
+            victim = self.blocks.youngest()
+            if victim is None:
+                raise RuntimeError("KV pool exhausted with nothing "
+                                   "preemptible")
+            self._preempt(victim)
+            if idx not in self.prefilling and idx not in self.active:
+                return False                 # preempted ourselves
+            pairs = self.blocks.cow_for_write(idx, start, end)
+        self._apply_cow(pairs)
+        return True
+
+    def _sample_peak(self) -> None:
+        self.stats["peak_block_util"] = max(
+            self.stats["peak_block_util"], self.blocks.utilization())
+
     def _run_chunk(self, mode: str, idx: int, start: int, take: int) -> None:
         st = self.prefilling[idx]
+        if not self._cow_or_preempt(idx, start, start + take):
+            return
         bucket = _bucket(take)
         toks = np.zeros((1, bucket), np.int32)
         toks[0, :take] = st.seq_tokens[start: start + take]   # right-pad
@@ -257,9 +342,12 @@ class Engine:
             jnp.asarray([start + take], np.int32),
             jnp.asarray([take - 1], np.int32))
         st.done = start + take
-        self.blocks.set_length(idx, st.done)
+        self.blocks.commit(idx, st.done, st.seq_tokens)
         self.stats["chunks"] += 1
         self.stats["chunk_tokens"] += take
+        # sample pool pressure BEFORE _maybe_retire below can release
+        # blocks — prefill-heavy steps used to under-report the peak
+        self._sample_peak()
         if st.done < len(st.seq_tokens):
             return
         # final chunk: the prompt's first generated token
@@ -301,15 +389,21 @@ class Engine:
 
     def _decode_paged(self, mode: str) -> None:
         # grow each active row's block table to cover the incoming write
-        # at position lens[idx]; preempt youngest sequences on exhaustion
+        # at position lens[idx] and COW-fork it if shared; preempt
+        # youngest sequences on exhaustion
         for idx in sorted(self.active):
-            while idx in self.active \
-                    and not self.blocks.ensure(idx, int(self.lens[idx]) + 1):
+            while idx in self.active:
+                if self.blocks.ensure(idx, int(self.lens[idx]) + 1):
+                    if self._cow_or_preempt(idx, int(self.lens[idx]),
+                                            int(self.lens[idx]) + 1):
+                        break
+                    continue                 # preempted (maybe ourselves)
                 victim = self.blocks.youngest()
                 if victim is None:
                     raise RuntimeError("KV pool exhausted with nothing "
                                        "preemptible")
                 self._preempt(victim)
+        self._sample_peak()                  # allocation peak, pre-retire
         if not self.active:
             return
         tokens = np.zeros((self.n_slots, 1), np.int32)
@@ -327,7 +421,14 @@ class Engine:
         now = self.clock()
         for idx, req in list(self.active.items()):
             self.lens[idx] += 1
-            self.blocks.set_length(idx, int(self.lens[idx]))
+            n = int(self.lens[idx])
+            if n % self.block_size == 0:
+                # tail block just filled: register it in the prefix index
+                # (generated content is reusable too — replays after
+                # preemption and shared multi-turn history hit it)
+                self.blocks.commit(idx, n, (req.tokens + req.output)[:n])
+            else:
+                self.blocks.set_length(idx, n)
             req.output.append(int(nxt[idx]))
             req.token_times.append(now)
             req.modes.append(mode)

@@ -19,11 +19,42 @@ Two layouts:
 Physical block 0 is reserved as a trash block: jit'd steps always write
 a full (possibly padded) chunk, and pad/inactive-row writes are pointed
 at block 0 so they can never clobber live cache state.
+
+Copy-on-write prefix caching (`prefix_cache=True`)
+--------------------------------------------------
+Every physical block carries a REFCOUNT, and every FULL block whose
+content has been committed is registered in a content-hash index keyed
+by a prefix chain hash `h_i = hash((h_{i-1}, tokens_of_block_i))` — a
+block's identity is the whole token prefix up to and including it, so
+identical (system-prompt / few-shot / replayed-after-preemption)
+prefixes map to identical chains. At admission `attach_prefix` walks a
+new sequence's chain and shares the longest run of cached blocks
+(incref, zero recompute, zero new HBM). Sharing is read-only: the engine
+always recomputes at least the last prompt token so the first-token
+logit exists, and `cow_for_write` forks any write-target block whose
+refcount exceeds one (allocate, copy bytes, decref the shared original)
+before the write lands — writers can never clobber a neighbour's prefix.
+
+Releasing a sequence (retire OR preempt) decrefs its blocks; registered
+blocks whose refcount hits zero are parked in an LRU pool of
+unreferenced-but-cached blocks instead of the free list. The allocator
+reclaims LRU blocks (evicting their index entries) only after the free
+list runs dry, so cached prefixes survive exactly as long as the pool
+has headroom and reclaim always happens BEFORE preemption would: a
+sequence is only ever preempted for blocks that live sequences hold.
+
+Block identity is token-based, not byte-based: under the dual-precision
+controller a reused block may have been written in either precision —
+interchangeable by construction in NestedFP's serving model (both modes
+read the same nested buffers). Forced-mode runs are bit-exact.
 """
 
 from __future__ import annotations
 
+import collections
 import dataclasses
+
+import numpy as np
 
 
 @dataclasses.dataclass
@@ -73,35 +104,61 @@ class SlotManager:
 TRASH_BLOCK = 0
 
 
+def _chain_hash(parent: int, tokens: tuple[int, ...]) -> int:
+    return hash((parent, tokens))
+
+
+_ROOT_HASH = hash(("prefix-root",))
+
+
 @dataclasses.dataclass
 class _Seq:
     request_id: str
     blocks: list[int]          # physical block ids, logical order
     length: int = 0            # tokens committed to the cache
     admitted: int = 0          # admission counter (largest == youngest)
+    hashes: list[int] = dataclasses.field(default_factory=list)
+    # chain hashes of the committed full-block prefix (len == number of
+    # full blocks already registered/matched for this sequence)
 
 
 class BlockManager:
     """Free-list allocator of fixed-size KV blocks with per-sequence
-    block tables.
+    block tables, per-block refcounts, and (optionally) copy-on-write
+    prefix caching (see module docstring for the COW design).
 
     `n_blocks` counts USABLE blocks; physical block 0 (trash) is extra,
     so pools must be allocated with `n_total_blocks` blocks. Unassigned
     block-table entries point at the trash block — reads through them
     are masked by per-row lengths, writes land in garbage space.
+
+    A persistent `(n_slots, max_blocks_per_seq)` int32 table array is
+    maintained incrementally by ensure/attach/fork/release — `tables()`
+    is O(1) per decode step instead of a full Python rebuild.
     """
 
     def __init__(self, n_slots: int, block_size: int, n_blocks: int,
-                 max_blocks_per_seq: int):
+                 max_blocks_per_seq: int, prefix_cache: bool = False):
         assert block_size > 0 and n_blocks > 0
         self.n_slots = n_slots
         self.block_size = block_size
         self.n_blocks = n_blocks
         self.max_blocks_per_seq = max_blocks_per_seq
+        self.prefix_cache = prefix_cache
         # pop() hands out low block ids first (deterministic layouts in tests)
         self._free = list(range(n_blocks, 0, -1))
         self.seqs: list[_Seq | None] = [None] * n_slots
         self._admissions = 0
+        self._ref = [0] * (n_blocks + 1)             # per-physical refcount
+        self._index: dict[int, int] = {}             # chain hash -> block id
+        self._hash_of: dict[int, int] = {}           # registered block -> hash
+        self._lru: collections.OrderedDict[int, None] = collections.OrderedDict()
+        # unreferenced-but-cached blocks, least recently used first
+        self._tables = np.full((n_slots, max_blocks_per_seq), TRASH_BLOCK,
+                               np.int32)
+        self.prefix_stats = {"queries": 0, "lookup_tokens": 0,
+                             "hit_tokens": 0, "blocks_shared": 0,
+                             "cow_forks": 0, "evictions": 0}
 
     # -- pool-level views ------------------------------------------------------
     @property
@@ -114,39 +171,75 @@ class BlockManager:
         return self.max_blocks_per_seq * self.block_size
 
     def n_free_blocks(self) -> int:
-        return len(self._free)
+        """Allocatable blocks: truly free + reclaimable LRU-cached."""
+        return len(self._free) + len(self._lru)
+
+    def n_cached_blocks(self) -> int:
+        """Unreferenced blocks kept warm in the prefix cache."""
+        return len(self._lru)
 
     def n_free_slots(self) -> int:
         return sum(1 for s in self.seqs if s is None)
 
     def blocks_in_use(self) -> int:
-        return self.n_blocks - len(self._free)
+        """Blocks referenced by live sequences (shared blocks count once)."""
+        return self.n_blocks - self.n_free_blocks()
 
     def utilization(self) -> float:
         return self.blocks_in_use() / self.n_blocks
 
+    def free_block_frac(self) -> float:
+        """Allocatable fraction of the pool — the MorphServe-style
+        memory-pressure signal fed to the dual-precision controller."""
+        return self.n_free_blocks() / self.n_blocks
+
     def table(self, idx: int):
         """(max_blocks_per_seq,) int32 block table for one slot; holes
-        point at the trash block."""
-        import numpy as np
-        row = np.full(self.max_blocks_per_seq, TRASH_BLOCK, np.int32)
-        seq = self.seqs[idx]
-        if seq is not None:
-            row[: len(seq.blocks)] = seq.blocks
-        return row
+        point at the trash block. A view into the persistent table —
+        valid until the next ensure/fork/release on this slot."""
+        return self._tables[idx]
 
     def tables(self):
-        import numpy as np
-        return np.stack([self.table(i) for i in range(self.n_slots)])
+        """(n_slots, max_blocks_per_seq) persistent int32 table array
+        (maintained incrementally; do not mutate)."""
+        return self._tables
+
+    # -- allocation core -------------------------------------------------------
+    def _alloc_block(self) -> int | None:
+        """Pop a free block; when the free list is dry, reclaim the
+        least-recently-used cached block (evicting its index entry) —
+        cached prefixes are always sacrificed before preemption is."""
+        if self._free:
+            return self._free.pop()
+        if self._lru:
+            b, _ = self._lru.popitem(last=False)
+            h = self._hash_of.pop(b)
+            del self._index[h]
+            self.prefix_stats["evictions"] += 1
+            return b
+        return None
+
+    def _release_block(self, b: int) -> None:
+        """Decref; park registered zero-ref blocks in the LRU cache,
+        return unregistered ones to the free list."""
+        self._ref[b] -= 1
+        assert self._ref[b] >= 0, f"refcount underflow on block {b}"
+        if self._ref[b] == 0:
+            if b in self._hash_of:
+                self._lru[b] = None          # most-recent end
+            else:
+                self._free.append(b)
 
     # -- sequence lifecycle ----------------------------------------------------
-    def try_allocate(self, request_id: str, seq_len: int,
-                     max_new: int) -> int | None:
+    def try_allocate(self, request_id: str, seq_len: int, max_new: int,
+                     cached_blocks: int = 0) -> int | None:
         """Claim a slot for a sequence (no blocks yet — `ensure` grows
         them chunk by chunk). None when no slot is free or when the
         first chunk could not possibly be admitted (fewer free blocks
         than the whole prompt needs — the admission watermark that keeps
-        preemption for decode-time growth, not thrashing admissions)."""
+        preemption for decode-time growth, not thrashing admissions).
+        `cached_blocks` discounts prefix-cache hits from that watermark:
+        matched blocks cost nothing to re-establish."""
         if seq_len + max_new > self.capacity:
             raise ValueError(
                 f"request {request_id}: {seq_len}+{max_new} exceeds paged "
@@ -155,8 +248,8 @@ class BlockManager:
             raise ValueError(
                 f"request {request_id}: needs more blocks than the whole "
                 f"pool holds ({self.n_blocks}) — would preempt-thrash forever")
-        need = -(-max(seq_len, 1) // self.block_size)
-        if need > len(self._free):
+        need = -(-max(seq_len, 1) // self.block_size) - cached_blocks
+        if need > self.n_free_blocks():
             return None
         for i, s in enumerate(self.seqs):
             if s is None:
@@ -167,17 +260,21 @@ class BlockManager:
 
     def ensure(self, idx: int, n_tokens: int) -> bool:
         """Grow slot `idx`'s block table to cover positions [0, n_tokens).
-        All-or-nothing; False when the free list runs dry (caller
-        preempts or defers)."""
+        All-or-nothing; False when the free list (including reclaimable
+        cached blocks) runs dry (caller preempts or defers)."""
         seq = self.seqs[idx]
         assert seq is not None, idx
         need = -(-n_tokens // self.block_size) - len(seq.blocks)
         if need <= 0:
             return True
-        if n_tokens > self.capacity or need > len(self._free):
+        if n_tokens > self.capacity or need > self.n_free_blocks():
             return False
         for _ in range(need):
-            seq.blocks.append(self._free.pop())
+            b = self._alloc_block()
+            assert b is not None          # guarded by n_free_blocks above
+            self._ref[b] = 1
+            self._tables[idx, len(seq.blocks)] = b
+            seq.blocks.append(b)
         return True
 
     def set_length(self, idx: int, n_tokens: int) -> None:
@@ -186,10 +283,15 @@ class BlockManager:
         seq.length = n_tokens
 
     def release(self, idx: int) -> None:
+        """Decref (not free) every block the sequence holds — shared
+        blocks survive for their other holders, registered blocks go to
+        the LRU cache."""
         seq = self.seqs[idx]
         if seq is None:
             return
-        self._free.extend(reversed(seq.blocks))
+        for b in reversed(seq.blocks):
+            self._release_block(b)
+        self._tables[idx, :] = TRASH_BLOCK
         self.seqs[idx] = None
 
     def youngest(self) -> int | None:
@@ -198,3 +300,145 @@ class BlockManager:
         live = [(s.admitted, i) for i, s in enumerate(self.seqs)
                 if s is not None]
         return max(live)[1] if live else None
+
+    # -- prefix caching --------------------------------------------------------
+    def _match(self, tokens) -> tuple[list[int], list[int]]:
+        """Longest cached full-block chain for `tokens`; returns
+        (block ids, chain hashes)."""
+        blocks: list[int] = []
+        hashes: list[int] = []
+        parent = _ROOT_HASH
+        bs = self.block_size
+        for i in range(len(tokens) // bs):
+            h = _chain_hash(parent, tuple(tokens[i * bs: (i + 1) * bs]))
+            b = self._index.get(h)
+            if b is None:
+                break
+            blocks.append(b)
+            hashes.append(h)
+            parent = h
+        return blocks, hashes
+
+    def lookup_prefix(self, tokens) -> int:
+        """Matched-prefix length in tokens (no side effects)."""
+        if not self.prefix_cache:
+            return 0
+        return len(self._match(tokens)[0]) * self.block_size
+
+    def prefix_admit_discount(self, tokens) -> int:
+        """Blocks the admission watermark may discount for `tokens`:
+        matched blocks held LIVE by other sequences (sharing them costs
+        nothing). Matched blocks parked in the LRU pool are already
+        counted by `n_free_blocks()`, so discounting them too would
+        double-count."""
+        if not self.prefix_cache:
+            return 0
+        return sum(1 for b in self._match(tokens)[0] if self._ref[b] > 0)
+
+    def attach_prefix(self, idx: int, tokens) -> int:
+        """Share the longest cached full-block prefix of `tokens` into
+        freshly-allocated slot `idx` (incref each matched block, pull
+        zero-ref ones out of the LRU pool). Returns the matched token
+        count; the caller starts prefill at that offset (recomputing at
+        least one token — `cow_for_write` forks the tail block if that
+        recompute lands in a shared one)."""
+        seq = self.seqs[idx]
+        assert seq is not None and not seq.blocks, "attach before ensure"
+        if not self.prefix_cache:
+            return 0
+        blocks, hashes = self._match(tokens)
+        blocks = blocks[: self.max_blocks_per_seq]
+        hashes = hashes[: len(blocks)]
+        for j, b in enumerate(blocks):
+            if self._ref[b] == 0:
+                del self._lru[b]
+            self._ref[b] += 1
+            self._tables[idx, j] = b
+        seq.blocks = list(blocks)
+        seq.hashes = list(hashes)
+        seq.length = len(blocks) * self.block_size
+        st = self.prefix_stats
+        st["queries"] += 1
+        st["lookup_tokens"] += len(tokens)
+        st["hit_tokens"] += seq.length
+        st["blocks_shared"] += len(blocks)
+        return seq.length
+
+    def cow_for_write(self, idx: int, start: int, end: int
+                      ) -> list[tuple[int, int]] | None:
+        """Copy-on-write fork of every shared block that the token write
+        range [start, end) touches: allocate a private replacement,
+        decref the shared original, and return (src, dst) pairs whose
+        cache bytes the CALLER must copy before writing. Returns None
+        when a fork cannot be allocated (pool truly exhausted — caller
+        preempts). Blocks must already be ensured over the range."""
+        seq = self.seqs[idx]
+        assert seq is not None and end <= len(seq.blocks) * self.block_size
+        span = range(start // self.block_size, -(-end // self.block_size))
+        # all-or-nothing: check every fork is allocatable BEFORE mutating,
+        # so a failure never strands completed forks whose (src, dst)
+        # pairs the caller would lose (bytes never copied -> stale reads)
+        if sum(1 for bi in span if self._ref[seq.blocks[bi]] > 1) \
+                > self.n_free_blocks():
+            return None
+        pairs: list[tuple[int, int]] = []
+        for bi in span:
+            src = seq.blocks[bi]
+            if self._ref[src] <= 1:
+                continue
+            dst = self._alloc_block()
+            assert dst is not None            # guarded above
+            self._ref[dst] = 1
+            self._release_block(src)
+            seq.blocks[bi] = dst
+            self._tables[idx, bi] = dst
+            pairs.append((src, dst))
+            self.prefix_stats["cow_forks"] += 1
+        return pairs
+
+    def commit(self, idx: int, n_tokens: int, tokens) -> None:
+        """Record that positions [0, n_tokens) now hold the KV of
+        `tokens[:n_tokens]`, and register every newly-FULL block in the
+        content-hash index so later sequences can share it. `tokens`
+        must be the sequence's full committed token stream."""
+        self.set_length(idx, n_tokens)
+        if not self.prefix_cache:
+            return
+        seq = self.seqs[idx]
+        bs = self.block_size
+        parent = seq.hashes[-1] if seq.hashes else _ROOT_HASH
+        for bi in range(len(seq.hashes), n_tokens // bs):
+            h = _chain_hash(parent, tuple(tokens[bi * bs: (bi + 1) * bs]))
+            b = seq.blocks[bi]
+            if h not in self._index and b not in self._hash_of:
+                self._index[h] = b
+                self._hash_of[b] = h
+            seq.hashes.append(h)
+            parent = h
+
+    # -- invariant audit (tests) ----------------------------------------------
+    def check_invariants(self) -> None:
+        ref = [0] * (self.n_blocks + 1)
+        for s in self.seqs:
+            if s is None:
+                continue
+            for b in s.blocks:
+                ref[b] += 1
+        assert ref == self._ref, (ref, self._ref)
+        free, lru = set(self._free), set(self._lru)
+        assert not (free & lru), "block both free and cached"
+        for b in range(1, self.n_blocks + 1):
+            if self._ref[b] == 0:
+                assert (b in free) ^ (b in lru), \
+                    f"zero-ref block {b} neither free nor cached (or both)"
+            else:
+                assert b not in free and b not in lru, \
+                    f"live block {b} on the free/cached list"
+        assert set(self._hash_of) == set(self._index.values())
+        for h, b in self._index.items():
+            assert self._hash_of[b] == h
+        for i, s in enumerate(self.seqs):
+            row = np.full(self.max_blocks_per_seq, TRASH_BLOCK, np.int32)
+            if s is not None:
+                row[: len(s.blocks)] = s.blocks
+            assert (self._tables[i] == row).all(), f"stale table row {i}"

@@ -315,3 +315,264 @@ class TestEngineRegressions:
         eng = Engine(cfg, sparams, n_slots=2, capacity=32,
                      forced_mode="fp16")
         assert isinstance(eng.queue, collections.deque)
+
+
+class TestPrefixCacheBlockManager:
+    """COW prefix caching invariants at the BlockManager level."""
+
+    def _commit_seq(self, bm, rid, tokens):
+        idx = bm.try_allocate(rid, len(tokens), 4)
+        assert idx is not None
+        assert bm.attach_prefix(idx, tokens) >= 0
+        assert bm.ensure(idx, len(tokens))
+        bm.commit(idx, len(tokens), tokens)
+        bm.check_invariants()
+        return idx
+
+    def test_release_parks_registered_blocks_in_lru(self):
+        bm = BlockManager(2, 4, 8, 8, prefix_cache=True)
+        toks = list(range(10, 22))                   # 3 full blocks
+        a = self._commit_seq(bm, "a", toks)
+        assert bm.blocks_in_use() == 3 and bm.n_cached_blocks() == 0
+        bm.release(a)
+        bm.check_invariants()
+        # decref, not free: blocks stay cached and reusable
+        assert bm.n_cached_blocks() == 3
+        assert bm.n_free_blocks() == 8               # still all allocatable
+        assert bm.lookup_prefix(toks) == 12
+
+    def test_attach_shares_and_increfs(self):
+        bm = BlockManager(3, 4, 8, 8, prefix_cache=True)
+        toks = list(range(30, 42))
+        a = self._commit_seq(bm, "a", toks)
+        b = bm.try_allocate("b", len(toks), 4)
+        matched = bm.attach_prefix(b, toks + [1, 2])
+        bm.check_invariants()
+        assert matched == 12
+        assert bm.seqs[b].blocks == bm.seqs[a].blocks
+        assert bm._ref[bm.seqs[a].blocks[0]] == 2
+        # shared blocks count once toward pool usage
+        assert bm.blocks_in_use() == 3
+        bm.release(a)
+        bm.check_invariants()
+        assert bm._ref[bm.seqs[b].blocks[0]] == 1
+        assert bm.n_cached_blocks() == 0             # still referenced by b
+
+    def test_cow_fork_gives_private_copy(self):
+        bm = BlockManager(3, 4, 8, 8, prefix_cache=True)
+        toks = list(range(50, 58))                   # 2 full blocks
+        a = self._commit_seq(bm, "a", toks)
+        b = bm.try_allocate("b", len(toks), 4)
+        bm.attach_prefix(b, toks)
+        shared_tail = bm.seqs[b].blocks[1]
+        pairs = bm.cow_for_write(b, 7, 8)            # rewrite last token
+        bm.check_invariants()
+        assert pairs and pairs[0][0] == shared_tail
+        assert bm.seqs[b].blocks[1] != shared_tail   # private now
+        assert bm.seqs[a].blocks[1] == shared_tail   # holder untouched
+        assert bm._ref[shared_tail] == 1 and bm._ref[bm.seqs[b].blocks[1]] == 1
+        assert bm.cow_for_write(b, 7, 8) == []       # idempotent: now private
+
+    def test_lru_reclaim_before_preemption(self):
+        """A dry free list reclaims cached blocks (evicting their index
+        entries) rather than failing ensure."""
+        bm = BlockManager(3, 4, 4, 4, prefix_cache=True)
+        a = self._commit_seq(bm, "a", list(range(8)))    # 2 blocks
+        bm.release(a)
+        assert bm.n_cached_blocks() == 2
+        b = bm.try_allocate("b", 16, 0)
+        assert bm.attach_prefix(b, list(range(100, 116))) == 0
+        assert bm.ensure(b, 16)                      # needs all 4 blocks
+        bm.check_invariants()
+        assert bm.n_cached_blocks() == 0 and bm.prefix_stats["evictions"] == 2
+        assert bm.lookup_prefix(list(range(8))) == 0  # evicted from index
+
+    def test_randomized_op_soup_invariants(self):
+        """Refcounts never negative, shared blocks never on the free
+        list, tables always consistent — under a random mix of admission
+        with sharing, growth, COW, commit, and release."""
+        rng = np.random.RandomState(0)
+        bm = BlockManager(4, 4, 12, 6, prefix_cache=True)
+        streams = [list(range(s, s + 20)) for s in (0, 0, 40, 80)]
+        live: dict[int, list] = {}
+        for _ in range(300):
+            op = rng.randint(4)
+            if op == 0 and bm.n_free_slots():
+                toks = streams[rng.randint(len(streams))]
+                idx = bm.try_allocate(f"r{_}", len(toks), 4,
+                                      bm.prefix_admit_discount(toks))
+                if idx is not None:
+                    matched = bm.attach_prefix(idx, toks)
+                    live[idx] = toks
+                    assert matched % bm.block_size == 0
+            elif op == 1 and live:
+                idx = list(live)[rng.randint(len(live))]
+                n = min(len(live[idx]),
+                        len(bm.seqs[idx].blocks) * bm.block_size
+                        + rng.randint(1, 6))
+                if bm.ensure(idx, n):
+                    start = rng.randint(n)
+                    if bm.cow_for_write(idx, start, n) is not None:
+                        bm.commit(idx, n, live[idx])
+            elif op == 2 and live:
+                idx = list(live)[rng.randint(len(live))]
+                bm.release(idx)
+                del live[idx]
+            else:
+                bm.lookup_prefix(streams[rng.randint(len(streams))])
+            bm.check_invariants()
+            assert all(r >= 0 for r in bm._ref)
+        for idx in list(live):
+            bm.release(idx)
+        bm.check_invariants()
+        assert bm.blocks_in_use() == 0
+
+
+class TestPrefixCacheEngine:
+    def test_prefix_reuse_reduces_prefill_and_blocks(self, tiny):
+        """N requests sharing a >=2-block prefix: prefilled tokens and
+        peak blocks_in_use drop vs caching off; outputs bit-exact; stats
+        report the hit."""
+        cfg, sparams = tiny
+        shared = list(range(7, 23))                  # 2 blocks of 8
+        prompts = [shared + [100 + i, 200 + i] for i in range(4)]
+        runs = {}
+        for pc in (True, False):
+            # chunk budget of one prompt per step: later requests admit
+            # only after earlier ones committed their blocks, so the
+            # shared prefix is actually in the index when they match
+            eng = Engine(cfg, sparams, n_slots=4, capacity=64,
+                         forced_mode="fp16", block_size=8,
+                         chunk_tokens=18, prefix_cache=pc)
+            for i, p in enumerate(prompts):
+                eng.submit(Request(f"r{i}", p, max_new=8))
+            # footprint compared at the same occupancy point: the first
+            # step where all 4 requests are resident and decoding
+            resident_blocks = None
+            while eng.queue or eng.active or eng.prefilling:
+                eng.step()
+                if resident_blocks is None and len(eng.active) == 4:
+                    resident_blocks = eng.blocks.blocks_in_use()
+            runs[pc] = ({r.request_id: r.output for r in eng.finished},
+                        eng.stats["chunk_tokens"], resident_blocks,
+                        eng.prefix_cache_stats())
+        out_on, prefill_on, blocks_on, stats_on = runs[True]
+        out_off, prefill_off, blocks_off, _ = runs[False]
+        assert out_on == out_off, "prefix caching changed greedy outputs"
+        assert prefill_on < prefill_off, \
+            f"no prefill saving: {prefill_on} vs {prefill_off}"
+        assert blocks_on is not None and blocks_off is not None \
+            and blocks_on < blocks_off, \
+            f"no block saving: {blocks_on} vs {blocks_off}"
+        assert stats_on["hit_rate"] > 0 and stats_on["blocks_saved"] >= 6
+
+    @pytest.mark.parametrize("planar", [False, True])
+    def test_bit_exact_with_caching_on_vs_off(self, tiny, planar):
+        """Greedy outputs with prefix caching on == off, planar and
+        non-planar NestedKV layouts."""
+        cfg, sparams = tiny
+        shared = list(range(11, 27))
+        prompts = [shared + list(range(40 + 3 * i, 43 + 3 * i))
+                   for i in range(3)]
+        outs = []
+        for pc in (True, False):
+            eng = Engine(cfg, sparams, n_slots=4, capacity=64,
+                         forced_mode="fp16", block_size=8, chunk_tokens=24,
+                         kv_planar=planar, prefix_cache=pc)
+            for i, p in enumerate(prompts):
+                eng.submit(Request(f"r{i}", p, max_new=4))
+            outs.append({r.request_id: r.output for r in eng.run()})
+        assert outs[0] == outs[1]
+
+    def test_cow_write_into_live_shared_block_is_isolated(self, tiny):
+        """A fully-cached block-aligned prompt re-admitted while the
+        original holder still decodes must COW-fork the tail block: both
+        sequences produce exactly their solo outputs."""
+        cfg, sparams = tiny
+        shared = list(range(7, 31))                  # 3 aligned blocks of 8
+
+        def solo(prompt, max_new):
+            eng = Engine(cfg, sparams, n_slots=4, capacity=64,
+                         forced_mode="fp16", block_size=8,
+                         prefix_cache=False)
+            eng.submit(Request("s", prompt, max_new=max_new))
+            return eng.run()[0].output
+
+        eng = Engine(cfg, sparams, n_slots=4, capacity=64,
+                     forced_mode="fp16", block_size=8)
+        eng.submit(Request("a", shared, max_new=20))
+        eng.step(), eng.step()          # a prefilled, blocks live + shared
+        eng.submit(Request("b", shared, max_new=4))
+        fin = {r.request_id: r.output for r in eng.run()}
+        eng.blocks.check_invariants()
+        assert eng.prefix_cache_stats()["cow_forks"] >= 1
+        assert fin["a"] == solo(shared, 20), "holder corrupted by COW write"
+        assert fin["b"] == solo(shared, 4)
+
+    def test_preemption_under_sharing_decrefs_correctly(self, tiny):
+        """Scarce pool + shared prefixes: preemption decrefs (never
+        frees a block another sequence still references) and outputs
+        match the ample-pool run exactly."""
+        cfg, sparams = tiny
+        shared = list(range(4, 12))
+        prompts = [shared + list(range(30 + 4 * i, 34 + 4 * i))
+                   for i in range(3)]
+
+        def run(n_blocks):
+            eng = Engine(cfg, sparams, n_slots=3, capacity=32,
+                         forced_mode="fp16", block_size=4,
+                         n_blocks=n_blocks, chunk_tokens=12)
+            for i, p in enumerate(prompts):
+                eng.submit(Request(f"r{i}", p, max_new=16))
+            fin = {r.request_id: r.output for r in eng.run()}
+            eng.blocks.check_invariants()
+            assert eng.blocks.blocks_in_use() == 0
+            return fin, eng.stats["preemptions"]
+
+        ample, p0 = run(24)
+        scarce, p1 = run(10)
+        assert p1 >= 1, "scarce pool never preempted"
+        assert ample == scarce
+        assert all(len(o) == 16 for o in scarce.values())
+
+    def test_shared_physical_blocks_transparent_to_planar_kernel(self):
+        """Two rows whose block tables point at the SAME physical blocks
+        must read identically to rows with duplicated private blocks —
+        the gather path makes sharing invisible to the kernel."""
+        b, h, hkv, d = 2, 8, 4, 64
+        bs, mb = 128, 2
+        rng = np.random.RandomState(3)
+        pool = rng.randn(mb + 1, bs, hkv, d).astype(np.float16)
+        pool_dup = np.concatenate([pool, pool[1:]], axis=0)  # private copies
+        q = jnp.asarray(rng.randn(b, h, d).astype(np.float16))
+        shared_tables = jnp.asarray([[1, 2], [1, 2]], jnp.int32)
+        dup_tables = jnp.asarray([[1, 2], [3, 4]], jnp.int32)
+        lens = jnp.asarray([bs * mb, 57], jnp.int32)
+        outs = []
+        for pk, tabs in ((pool, shared_tables), (pool_dup, dup_tables)):
+            k_hi, k_lo = nf.split_bytes(jnp.asarray(pk))
+            outs.append(np.asarray(paged_planar_decode_attention(
+                q, k_hi, k_lo, k_hi, k_lo, tabs, lens, interpret=True)))
+        np.testing.assert_array_equal(outs[0], outs[1])
+
+    def test_cow_fork_is_all_or_nothing(self):
+        """A multi-block fork that cannot fully allocate must mutate
+        NOTHING: a partial fork would strand (src, dst) pairs whose
+        bytes the caller never learns to copy (stale-KV corruption)."""
+        bm = BlockManager(3, 4, 5, 5, prefix_cache=True)
+        toks = list(range(12))
+        a = bm.try_allocate("a", 12, 0)
+        bm.attach_prefix(a, toks)
+        assert bm.ensure(a, 12)
+        bm.commit(a, 12, toks)
+        b = bm.try_allocate("b", 12, 0,
+                            cached_blocks=bm.prefix_admit_discount(toks))
+        assert bm.attach_prefix(b, toks) == 12       # 3 shared blocks
+        before = list(bm.seqs[b].blocks)
+        assert bm.cow_for_write(b, 0, 12) is None    # needs 3, pool has 2
+        assert bm.seqs[b].blocks == before, "partial fork leaked"
+        assert bm.prefix_stats["cow_forks"] == 0
+        bm.check_invariants()
+        pairs = bm.cow_for_write(b, 0, 8)            # 2 of 3 fits
+        assert pairs is not None and len(pairs) == 2
+        bm.check_invariants()

@@ -118,3 +118,49 @@ class TestTraceInvariants:
                [(r.arrival_s, r.prompt_len) for r in b]
         times = [r.arrival_s for r in a]
         assert times == sorted(times)
+
+
+class TestBlockManagerCOWInvariants:
+    """Hypothesis-driven op soup over the refcounted prefix-caching
+    BlockManager: refcounts never negative, zero-ref blocks live on
+    exactly one of {free list, LRU cache}, shared blocks never on
+    either, the hash index stays bijective, and the incremental table
+    array never goes stale (check_invariants audits all of it)."""
+
+    @settings(max_examples=40, deadline=None)
+    @given(st.integers(0, 2**31 - 1),
+           st.lists(st.integers(0, 4), min_size=10, max_size=120))
+    def test_op_soup(self, seed, ops):
+        from repro.serving.kvcache import BlockManager
+
+        rng = np.random.RandomState(seed % (2**31))
+        bm = BlockManager(n_slots=3, block_size=4, n_blocks=10,
+                          max_blocks_per_seq=5, prefix_cache=True)
+        streams = [list(range(s, s + 16)) for s in (0, 0, 32)]
+        live: list[int] = []
+        for op in ops:
+            if op == 0 and bm.n_free_slots():
+                toks = streams[rng.randint(len(streams))]
+                idx = bm.try_allocate(f"r{rng.randint(1 << 30)}", len(toks),
+                                      4, bm.prefix_admit_discount(toks))
+                if idx is not None:
+                    bm.attach_prefix(idx, toks)
+                    live.append(idx)
+            elif op == 1 and live:
+                idx = live[rng.randint(len(live))]
+                toks = streams[rng.randint(len(streams))]
+                n = rng.randint(1, len(toks) + 1)
+                if bm.ensure(idx, n) and \
+                        bm.cow_for_write(idx, rng.randint(n), n) is not None:
+                    bm.commit(idx, n, toks)
+            elif op == 2 and live:
+                idx = live.pop(rng.randint(len(live)))
+                bm.release(idx)
+            elif op == 3:
+                bm.lookup_prefix(streams[rng.randint(len(streams))])
+            bm.check_invariants()
+        for idx in live:
+            bm.release(idx)
+        bm.check_invariants()
+        assert bm.blocks_in_use() == 0
+        assert bm.n_free_blocks() == bm.n_blocks

@@ -132,6 +132,52 @@ class TestController:
             ctrl.decide(StepObservation(1, 0, measured_step_ms=50.0))
         assert ctrl.mode == "fp8"
 
+    def test_free_block_headroom_triggers_fp8(self):
+        """MorphServe-style memory-pressure signal: scarce KV headroom
+        forces FP8 even when predicted/measured latency is comfortably
+        inside the SLO; recovery honours the hysteresis dwell."""
+        ctrl = DualPrecisionController(
+            SLOConfig(tpot_ms=33.3, hysteresis_steps=3,
+                      free_block_frac_min=0.15),
+            fp16_ms_per_token=1e-4, fp8_ms_per_token=5e-5)
+        assert ctrl.decide(StepObservation(1, 0, 1.0,
+                                           free_block_frac=0.5)) == "fp16"
+        assert ctrl.decide(StepObservation(1, 0, 1.0,
+                                           free_block_frac=0.05)) == "fp8"
+        # pressure persists: dwell keeps refreshing, mode stays fp8
+        for _ in range(5):
+            assert ctrl.decide(StepObservation(
+                1, 0, 1.0, free_block_frac=0.05)) == "fp8"
+        # pressure clears: dwell must expire before fp16 returns
+        modes = [ctrl.decide(StepObservation(1, 0, 1.0,
+                                             free_block_frac=0.9))
+                 for _ in range(4)]
+        assert modes[:2] == ["fp8", "fp8"], "left fp8 before dwell expired"
+        assert modes[-1] == "fp16", "never recovered after headroom returned"
+        # non-paged engines pass None: signal must be inert
+        ctrl2 = DualPrecisionController(
+            SLOConfig(tpot_ms=33.3), fp16_ms_per_token=1e-4,
+            fp8_ms_per_token=5e-5)
+        assert ctrl2.decide(StepObservation(1, 0, 1.0,
+                                            free_block_frac=None)) == "fp16"
+
+    def test_engine_wires_free_block_frac(self, tiny):
+        """A scarce paged pool must engage FP8 through the headroom
+        trigger alone (latency thresholds set far out of reach)."""
+        cfg, sparams = tiny
+        ctrl = DualPrecisionController(
+            SLOConfig(tpot_ms=1e9, hysteresis_steps=2,
+                      free_block_frac_min=0.3),
+            fp16_ms_per_token=1e-9, fp8_ms_per_token=1e-9)
+        eng = Engine(cfg, sparams, n_slots=4, capacity=32,
+                     controller=ctrl, block_size=4, n_blocks=10)
+        for i in range(3):
+            eng.submit(Request(f"r{i}", list(range(4 + 8 * i, 12 + 8 * i)),
+                               max_new=16))
+        eng.run()
+        assert "fp8" in ctrl.history, \
+            "free-block headroom never engaged FP8"
+
 
 class TestSimulation:
     def test_dual_beats_fp16_on_bursty_trace(self):
