@@ -46,42 +46,56 @@ def modeled() -> list[dict]:
     return rows
 
 
-def measured(n_requests: int = 8) -> list[dict]:
-    """Paged engine end-to-end in both forced modes. The scarce-pool run
-    (n_blocks below dense-equivalent) exercises decode-growth preemption —
-    the memory-pressure regime the FP16↔FP8 switch exists for."""
+MEASURED_FAMILIES = {
+    # descriptor families through the ONE paged scheduling path:
+    # GQA K/V blocks and MLA latent (c_kv + k_rope) blocks
+    "gqa": "qwen1.5-0.5b",
+    "mla": "deepseek-v3-671b",
+}
+
+
+def measured(n_requests: int = 8, families=("gqa", "mla")) -> list[dict]:
+    """Paged engine end-to-end in both forced modes, per cache family.
+    The scarce-pool run (n_blocks below dense-equivalent) exercises
+    decode-growth preemption — the memory-pressure regime the FP16↔FP8
+    switch exists for. The MLA rows track the latent-cache serving
+    trajectory (block utilization, preemptions, prefix hit-rate over
+    latent blocks)."""
     from repro.configs import ARCHS
     from repro.models import model as M
     from repro.models.convert import to_serving
     from repro.serving.engine import Engine, Request
 
-    cfg = ARCHS["qwen1.5-0.5b"].reduced()
-    params = M.init_params(jax.random.PRNGKey(0), cfg)
-    sparams = to_serving(params)
     rows = []
-    for mode in ("fp16", "fp8"):
-        for n_blocks, tag in ((None, ""), (12, "_scarce")):
-            rng = np.random.RandomState(0)
-            eng = Engine(cfg, sparams, n_slots=8, capacity=128,
-                         forced_mode=mode, block_size=16, n_blocks=n_blocks)
-            for i in range(n_requests):
-                eng.submit(Request(f"r{i}", list(rng.randint(1, 400, 16)),
-                                   max_new=8))
-            t0 = time.perf_counter()
-            fin = eng.run()
-            dt = time.perf_counter() - t0
-            toks = sum(len(r.output) for r in fin)
-            ps = eng.prefix_cache_stats()
-            rows.append({"name": f"e2e_measured_cpu/{mode}{tag}",
-                         "tokens": toks, "seconds": round(dt, 2),
-                         "tok_s": round(toks / dt, 1),
-                         "requests": len(fin),
-                         "peak_block_util": round(
-                             eng.stats["peak_block_util"], 3),
-                         "preemptions": eng.stats["preemptions"],
-                         "prefill_chunks": eng.stats["chunks"],
-                         "prefix_hit_rate": round(ps["hit_rate"], 3),
-                         "blocks_saved": ps["blocks_saved"]})
+    for fam in families:
+        cfg = ARCHS[MEASURED_FAMILIES[fam]].reduced()
+        params = M.init_params(jax.random.PRNGKey(0), cfg)
+        sparams = to_serving(params)
+        for mode in ("fp16", "fp8"):
+            for n_blocks, tag in ((None, ""), (12, "_scarce")):
+                rng = np.random.RandomState(0)
+                eng = Engine(cfg, sparams, n_slots=8, capacity=128,
+                             forced_mode=mode, block_size=16,
+                             n_blocks=n_blocks)
+                for i in range(n_requests):
+                    eng.submit(Request(f"r{i}",
+                                       list(rng.randint(1, 400, 16)),
+                                       max_new=8))
+                t0 = time.perf_counter()
+                fin = eng.run()
+                dt = time.perf_counter() - t0
+                toks = sum(len(r.output) for r in fin)
+                ps = eng.prefix_cache_stats()
+                rows.append({"name": f"e2e_measured_cpu/{fam}_{mode}{tag}",
+                             "tokens": toks, "seconds": round(dt, 2),
+                             "tok_s": round(toks / dt, 1),
+                             "requests": len(fin),
+                             "peak_block_util": round(
+                                 eng.stats["peak_block_util"], 3),
+                             "preemptions": eng.stats["preemptions"],
+                             "prefill_chunks": eng.stats["chunks"],
+                             "prefix_hit_rate": round(ps["hit_rate"], 3),
+                             "blocks_saved": ps["blocks_saved"]})
     return rows
 
 

@@ -1,9 +1,11 @@
 """Paper Fig. 1b: SLO compliance under a bursty trace — FP16 vs FP8 vs
-dual-precision (NestedFP) on the Azure-like arrival process — plus two
+dual-precision (NestedFP) on the Azure-like arrival process — plus three
 functional paged-engine runs:
 
 * `measured_paged_engine` — a burst into a deliberately scarce pool
   (block utilization, preemptions, prefix-cache hit rate);
+* `measured_mla_engine` — the same burst over an MLA (deepseek-class)
+  model whose latent planes page through the same BlockManager;
 * `measured_engine_trace` — the Azure-like trace driven through the REAL
   engine with request submission gated on `Request.arrival_s` against
   the engine clock (the modeled rows abstract arrivals away; the old
@@ -34,11 +36,12 @@ def run() -> list[dict]:
         d["name"] = f"slo_trace/{pol}"
         rows.append(d)
     rows.append(measured_paged_engine())
+    rows.append(measured_mla_engine())
     rows.append(measured_engine_trace())
     return rows
 
 
-def _tiny_engine(**kw):
+def _tiny_engine(arch: str = "qwen1.5-0.5b", **kw):
     import jax
 
     from repro.configs import ARCHS
@@ -46,7 +49,7 @@ def _tiny_engine(**kw):
     from repro.models.convert import to_serving
     from repro.serving.engine import Engine
 
-    cfg = ARCHS["qwen1.5-0.5b"].reduced()
+    cfg = ARCHS[arch].reduced()
     params = M.init_params(jax.random.PRNGKey(0), cfg)
     return Engine(cfg, to_serving(params), **kw)
 
@@ -72,6 +75,41 @@ def measured_paged_engine(n_requests: int = 12) -> dict:
     fin = eng.run()
     ps = eng.prefix_cache_stats()
     return {"name": "slo_trace/paged_engine_burst",
+            "completed": len(fin), "submitted": n_requests,
+            "peak_block_util": round(eng.stats["peak_block_util"], 3),
+            "preemptions": eng.stats["preemptions"],
+            "prefill_chunks": eng.stats["chunks"],
+            "prefix_hit_rate": round(ps["hit_rate"], 3),
+            "blocks_saved": ps["blocks_saved"],
+            "fp16_fraction": round(ctrl.fp16_time_fraction(), 3)}
+
+
+def measured_mla_engine(n_requests: int = 8) -> dict:
+    """Same scarce-pool burst over an MLA (deepseek-class) model: the
+    latent `c_kv`+`k_rope` planes page through the same BlockManager, so
+    the row tracks latent-block utilization, preemptions, and prefix
+    hit-rate over latent blocks — the perf trajectory for the families
+    the legacy fixed-slot path used to hide from the controller."""
+    import numpy as np
+
+    from repro.core.policy import DualPrecisionController, SLOConfig
+    from repro.serving.engine import Request
+
+    ctrl = DualPrecisionController(SLOConfig(tpot_ms=33.3),
+                                   fp16_ms_per_token=0.2,
+                                   fp8_ms_per_token=0.1)
+    rng = np.random.RandomState(1)
+    eng = _tiny_engine("deepseek-v3-671b", n_slots=6, capacity=64,
+                       controller=ctrl, block_size=8, n_blocks=24,
+                       chunk_tokens=64)
+    sys_prompt = list(rng.randint(1, 400, 8))
+    for i in range(n_requests):
+        eng.submit(Request(f"r{i}",
+                           sys_prompt + list(rng.randint(1, 400, 16)),
+                           max_new=12))
+    fin = eng.run()
+    ps = eng.prefix_cache_stats()
+    return {"name": "slo_trace/mla_engine_burst",
             "completed": len(fin), "submitted": n_requests,
             "peak_block_util": round(eng.stats["peak_block_util"], 3),
             "preemptions": eng.stats["preemptions"],

@@ -112,6 +112,17 @@ class ArchConfig:
     def has_decoder(self) -> bool:
         return True  # all assigned archs have a decoding path
 
+    @property
+    def cache_kind(self) -> str:
+        """Serving cache-descriptor family (see serving/kvcache.py):
+        'gqa' | 'mla' | 'hybrid' | 'ssm' | 'encdec'. All but 'encdec'
+        run through the engine's paged scheduling path."""
+        if self.family == "encdec":
+            return "encdec"
+        if self.family in ("ssm", "hybrid"):
+            return self.family
+        return "mla" if self.mla is not None else "gqa"
+
     def reduced(self) -> "ArchConfig":
         """2-layer, d_model<=512, <=4 experts variant for CPU smoke tests."""
         small_moe = None

@@ -16,7 +16,10 @@ Besides latency, KV **memory pressure** is a first-class FP8 trigger
 free-block headroom drops below `free_block_frac_min`, imminent
 preemptions threaten TPOT far more than the compute itself, so the
 controller drops to FP8 early — the same hysteresis dwell governs the
-return to FP16 once headroom recovers.
+return to FP16 once headroom recovers. Since every serving family pages
+through one BlockManager (GQA K/V, MLA latent planes, hybrid
+shared-attention blocks — serving/kvcache.py cache descriptors), the
+signal covers deepseek/zamba-class memory pressure, not just GQA.
 """
 
 from __future__ import annotations
@@ -44,7 +47,9 @@ class StepObservation:
                                      # decode (chunked prefill shares the step)
     free_block_frac: float | None = None
                                      # allocatable fraction of the paged KV
-                                     # pool (None: engine is not paged)
+                                     # pool — GQA K/V, MLA latent, or hybrid
+                                     # shared-attn blocks alike (None: caller
+                                     # has no pool, e.g. the simulator)
 
 
 class DualPrecisionController:

@@ -83,10 +83,14 @@ def _causal_conv(u: jax.Array, w: jax.Array, b: jax.Array,
 
 
 
-def ssd_chunked(x, dt, A, B, C, D, *, chunk: int):
+def ssd_chunked(x, dt, A, B, C, D, *, chunk: int, initial_state=None):
     """Chunked SSD scan.
 
     x: (b,l,h,p)  dt: (b,l,h)  A: (h,) (negative)  B,C: (b,l,g,n)  D: (h,)
+    initial_state: (b,h,p,n) f32 carried in from an earlier chunk of the
+    same sequence (None = zeros — fresh sequence). Enables chunked
+    prefill through the paged engine: each prompt chunk resumes the SSD
+    recurrence where the previous chunk's state left off.
     returns y: (b,l,h,p), final state (b,h,p,n).
     """
     b, l, h, p = x.shape
@@ -130,7 +134,8 @@ def ssd_chunked(x, dt, A, B, C, D, *, chunk: int):
         S_new = S * decay_c[..., None, None] + states_c
         return S_new, S                              # emit state BEFORE chunk
 
-    S0 = jnp.zeros((b, h, p, n), jnp.float32)
+    S0 = (jnp.zeros((b, h, p, n), jnp.float32) if initial_state is None
+          else initial_state.astype(jnp.float32))
     S_final, S_prev = jax.lax.scan(
         step, S0,
         (chunk_states.transpose(1, 0, 2, 3, 4), chunk_decay.transpose(1, 0, 2)))
@@ -160,8 +165,16 @@ def ssd_decode_step(state, x, dt, A, B, C, D):
 
 
 def mamba2_block(rt: Runtime, p: dict, cfg, x: jax.Array, *,
-                 phase: str, cache: dict | None = None):
+                 phase: str, cache: dict | None = None, kv_len=None):
     """x: (B, S, D). cache (decode): {"conv": (B,W-1,C), "ssm": (B,H,P,N)}.
+
+    phase "paged" is the engine's unified chunk/decode entry: S tokens
+    continue the recurrence from the slot-resident cache state (decode is
+    the S == 1 special case, dispatched to `ssd_decode_step` so batched
+    decode stays bit-identical to the fixed-slot decode arithmetic).
+    `kv_len` (B,) masks state writes for inactive rows (kv_len == 0):
+    the engine batch-decodes all slots, and a row that is mid-prefill or
+    empty must not have its state clobbered by garbage tokens.
 
     Returns (out, new_cache | None (train) | prefill cache)."""
     s = cfg.ssm
@@ -190,6 +203,26 @@ def mamba2_block(rt: Runtime, p: dict, cfg, x: jax.Array, *,
         new_cache = ({"conv_x": new_cx.astype(jnp.float16),
                       "conv_bc": new_cb.astype(jnp.float16), "ssm": S_final}
                      if phase == "prefill" else None)
+    elif phase == "paged":
+        if seq == 1:   # batched decode — same arithmetic as fixed-slot decode
+            y1, S_new = ssd_decode_step(
+                cache["ssm"].astype(jnp.float32), xh[:, 0], dt[:, 0], A,
+                Bm[:, 0], Cm[:, 0], p["D"])
+            y = y1[:, None]
+        else:          # prompt chunk — resume the SSD scan from cache state
+            y, S_new = ssd_chunked(xh, dt, A, Bm, Cm, p["D"],
+                                   chunk=s.chunk_size,
+                                   initial_state=cache["ssm"])
+        new_cache = {"conv_x": new_cx.astype(jnp.float16),
+                     "conv_bc": new_cb.astype(jnp.float16), "ssm": S_new}
+        if kv_len is not None:
+            # inactive rows (kv_len == 0) keep their old state verbatim
+            from repro.models.layers import _as_lens
+            act = _as_lens(kv_len, b) > 0
+            new_cache = {
+                k: jnp.where(act.reshape((b,) + (1,) * (v.ndim - 1)),
+                             v, cache[k].astype(v.dtype))
+                for k, v in new_cache.items()}
     else:  # decode: seq == 1
         y1, S_new = ssd_decode_step(
             cache["ssm"].astype(jnp.float32), xh[:, 0], dt[:, 0], A,

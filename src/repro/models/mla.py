@@ -63,15 +63,72 @@ def _project_kv_latent(rt, p, cfg, x, positions):
     return c_kv, k_rope       # (B,S,r), (B,S,d_rope)
 
 
+def _absorbed_weights(p, m, h):
+    """W_uk / W_uv in absorbed form: (r, H, d) f32."""
+    wk_b = p["wk_b"].weight.read_f16() if hasattr(p["wk_b"], "weight") \
+        else p["wk_b"]["w"]
+    wv_b = p["wv_b"].weight.read_f16() if hasattr(p["wv_b"], "weight") \
+        else p["wv_b"]["w"]
+    wk_b = wk_b.astype(jnp.float32).reshape(m.kv_lora_rank, h, m.qk_nope_dim)
+    wv_b = wv_b.astype(jnp.float32).reshape(m.kv_lora_rank, h, m.v_head_dim)
+    return wk_b, wv_b
+
+
+def _absorbed_attend(q_nope, q_rope, c_kv, k_rope, wk_b, wv_b, m, mask):
+    """Absorbed latent-space attention for C query tokens over a latent
+    cache of Cap tokens. q_*: (B,C,H,·); c_kv: (B,Cap,r);
+    k_rope: (B,Cap,d_rope); mask: (B,C,Cap) bool. Returns (B,C,H,dv)."""
+    q_abs = jnp.einsum("bqhd,rhd->bqhr", q_nope.astype(jnp.float32), wk_b)
+    scale = (m.qk_nope_dim + m.qk_rope_dim) ** -0.5
+    s_lat = jnp.einsum("bqhr,bkr->bhqk", q_abs, c_kv.astype(jnp.float32))
+    s_rope = jnp.einsum("bqhd,bkd->bhqk", q_rope.astype(jnp.float32),
+                        k_rope.astype(jnp.float32))
+    scores = jnp.where(mask[:, None], (s_lat + s_rope) * scale, NEG_INF)
+    probs = jax.nn.softmax(scores, axis=-1)
+    ctx_lat = jnp.einsum("bhqk,bkr->bqhr", probs, c_kv.astype(jnp.float32))
+    return jnp.einsum("bqhr,rhd->bqhd", ctx_lat, wv_b)
+
+
 def mla_attention(rt: Runtime, p: dict, cfg, x: jax.Array, *, phase: str,
-                  positions, cache: dict | None = None, kv_len=None):
-    """cache: {"c_kv": (B,Cap,r), "k_rope": (B,Cap,d_rope)}."""
+                  positions, cache: dict | None = None, kv_len=None,
+                  paged=None):
+    """cache: {"c_kv": (B,Cap,r), "k_rope": (B,Cap,d_rope)} (fixed-slot
+    decode), or block-pooled planes {"c_kv": (NB,BS,r), "k_rope":
+    (NB,BS,d_rope)} for phase "paged" (see layers.attention for the
+    paged=(phys_write, phys_read, q_offset) contract: the chunk's
+    latents are scattered into the pool, then gathered back per row in
+    logical order, so COW-shared blocks are transparent here too).
+    Phase "paged" covers BOTH chunked prefill and batched decode in the
+    ABSORBED form — one arithmetic path, so chunked and monolithic
+    prefill produce bit-identical logits."""
     m = cfg.mla
     b, s, _ = x.shape
     h = cfg.n_heads
     q_nope, q_rope = _project_q(rt, p, cfg, x, positions)
 
-    if phase in ("train", "prefill"):
+    if phase == "paged":
+        from repro.models.layers import _as_lens
+        phys_write, phys_read, q_offset = paged
+        c_new, kr_new = _project_kv_latent(rt, p, cfg, x, positions)
+        wf = phys_write.reshape(-1)
+        ckv_f = cache["c_kv"].reshape(-1, m.kv_lora_rank).at[wf].set(
+            c_new.reshape(-1, m.kv_lora_rank).astype(cache["c_kv"].dtype))
+        kr_f = cache["k_rope"].reshape(-1, m.qk_rope_dim).at[wf].set(
+            kr_new.reshape(-1, m.qk_rope_dim).astype(cache["k_rope"].dtype))
+        new_cache = {"c_kv": ckv_f.reshape(cache["c_kv"].shape),
+                     "k_rope": kr_f.reshape(cache["k_rope"].shape)}
+        c_kv = ckv_f[phys_read]                       # (B, Cap, r) logical
+        k_rope = kr_f[phys_read]
+        lens = _as_lens(kv_len, b)
+        cap = c_kv.shape[1]
+        qpos = q_offset[:, None] + jnp.arange(s, dtype=jnp.int32)[None, :]
+        kpos = jnp.arange(cap, dtype=jnp.int32)
+        mask = (kpos[None, None, :] <= qpos[..., None]) \
+            & (kpos[None, None, :] < lens[:, None, None])
+        wk_b, wv_b = _absorbed_weights(p, m, h)
+        o = _absorbed_attend(q_nope, q_rope, c_kv, k_rope, wk_b, wv_b, m,
+                             mask)
+    elif phase in ("train", "prefill"):
         c_kv, k_rope = _project_kv_latent(rt, p, cfg, x, positions)
         # materialize per-head K/V from the latent
         k_nope = apply_linear(rt, p["wk_b"], c_kv).reshape(b, s, h, m.qk_nope_dim)
@@ -95,28 +152,13 @@ def mla_attention(rt: Runtime, p: dict, cfg, x: jax.Array, *, phase: str,
             kr_new[:, 0].astype(cache["k_rope"].dtype))
         new_cache = {"c_kv": c_kv, "k_rope": k_rope}
 
-        wk_b = p["wk_b"].weight.read_f16() if hasattr(p["wk_b"], "weight") \
-            else p["wk_b"]["w"]
-        wv_b = p["wv_b"].weight.read_f16() if hasattr(p["wv_b"], "weight") \
-            else p["wv_b"]["w"]
-        wk_b = wk_b.astype(jnp.float32).reshape(m.kv_lora_rank, h, m.qk_nope_dim)
-        wv_b = wv_b.astype(jnp.float32).reshape(m.kv_lora_rank, h, m.v_head_dim)
-
-        # absorb W_uk into q: (B,1,H,r)
-        q_abs = jnp.einsum("bqhd,rhd->bqhr", q_nope.astype(jnp.float32), wk_b)
-        scale = (m.qk_nope_dim + m.qk_rope_dim) ** -0.5
-        s_lat = jnp.einsum("bqhr,bkr->bhqk", q_abs,
-                           c_kv.astype(jnp.float32))
-        s_rope = jnp.einsum("bqhd,bkd->bhqk", q_rope.astype(jnp.float32),
-                            k_rope.astype(jnp.float32))
-        scores = (s_lat + s_rope) * scale
+        wk_b, wv_b = _absorbed_weights(p, m, h)
         cap = c_kv.shape[1]
-        mask = (jnp.arange(cap)[None, None, None, :]
-                < lens[:, None, None, None])
-        scores = jnp.where(mask, scores, NEG_INF)
-        probs = jax.nn.softmax(scores, axis=-1)
-        ctx_lat = jnp.einsum("bhqk,bkr->bqhr", probs, c_kv.astype(jnp.float32))
-        o = jnp.einsum("bqhr,rhd->bqhd", ctx_lat, wv_b)
+        mask = jnp.broadcast_to(
+            jnp.arange(cap)[None, None, :] < lens[:, None, None],
+            (b, 1, cap))
+        o = _absorbed_attend(q_nope, q_rope, c_kv, k_rope, wk_b, wv_b, m,
+                             mask)
 
     o = o.reshape(b, s, h * m.v_head_dim).astype(rt.dtype)
     return apply_linear(rt, p["wo"], o), new_cache

@@ -73,7 +73,7 @@ def apply_decoder_block(rt: Runtime, p: dict, cfg: ArchConfig, x, *,
     if _attn_kind(cfg) == "mla":
         a, new_cache = MLA.mla_attention(rt, p["attn"], cfg, h, phase=phase,
                                          positions=positions, cache=cache,
-                                         kv_len=kv_len)
+                                         kv_len=kv_len, paged=paged)
     else:
         a, new_cache = L.attention(rt, p["attn"], cfg, h, phase=phase,
                                    positions=positions, window=window,
@@ -100,10 +100,10 @@ def init_ssm_block(key, cfg: ArchConfig) -> dict:
 
 
 def apply_ssm_block(rt: Runtime, p: dict, cfg: ArchConfig, x, *,
-                    phase: str, cache=None):
+                    phase: str, cache=None, kv_len=None):
     h = L.rms_norm(x, p["ln1"], cfg.norm_eps)
     y, new_cache = M2.mamba2_block(rt, p["mamba"], cfg, h, phase=phase,
-                                   cache=cache)
+                                   cache=cache, kv_len=kv_len)
     return x + y, new_cache
 
 
@@ -146,9 +146,7 @@ def init_cache(cfg: ArchConfig, batch: int, capacity: int,
 
     planar=True stores GQA caches as byte planes (NestedKV)."""
     fam = cfg.family
-    if fam in ("dense", "vlm"):
-        return {"attn": _gqa_cache(cfg, cfg.n_layers, batch, capacity, planar)}
-    if fam == "moe":
+    if fam in ("dense", "moe", "vlm"):
         if cfg.mla is not None:
             return {"attn": _mla_cache(cfg, cfg.n_layers, batch, capacity)}
         return {"attn": _gqa_cache(cfg, cfg.n_layers, batch, capacity, planar)}
@@ -168,23 +166,98 @@ def init_cache(cfg: ArchConfig, batch: int, capacity: int,
     raise ValueError(fam)
 
 
-def init_paged_cache(cfg: ArchConfig, n_total_blocks: int, block_size: int,
-                     planar: bool = False) -> dict:
-    """Block-paged GQA cache pytree: leaves (L, NB, BS, Hkv, Hd) with NO
-    batch dim — sequences own block ids, not rows (serving/kvcache.py
-    BlockManager; physical block 0 is the trash block). planar=True
-    stores byte planes (NestedKV on paged blocks)."""
-    if cfg.family not in ("dense", "moe", "vlm") or cfg.mla is not None:
-        raise ValueError(
-            f"paged KV supports GQA attention families only, not "
-            f"{cfg.family}/mla={cfg.mla is not None}")
-    hkv, hd = cfg.n_kv_heads, cfg.resolved_head_dim
-    shp = (cfg.n_layers, n_total_blocks, block_size, hkv, hd)
+def cache_descriptor(cfg: ArchConfig, planar: bool = False) -> "KV.CacheDescriptor":
+    """Per-family serving cache descriptor (serving/kvcache.py): which
+    planes are block-paged and which are slot-resident, with per-token /
+    per-slot byte accounting. Raises for enc-dec (engine-unsupported)."""
+    from repro.serving import kvcache as KV
+
+    kind = cfg.cache_kind
+    if kind == "encdec":
+        raise NotImplementedError(
+            "engine serves decoder-only archs; enc-dec serving is "
+            "covered by the dry-run + benchmarks")
+    cd = "float16"                                   # CACHE_DTYPE name
+    if kind == "mla":
+        if planar:
+            raise ValueError("byte-planar NestedKV applies to GQA K/V "
+                             "planes only, not MLA latents")
+        m = cfg.mla
+        return KV.CacheDescriptor("mla", planes=(
+            KV.PlaneSpec("c_kv", cfg.n_layers, (m.kv_lora_rank,), cd),
+            KV.PlaneSpec("k_rope", cfg.n_layers, (m.qk_rope_dim,), cd)))
+    if kind == "gqa":
+        hkv, hd = cfg.n_kv_heads, cfg.resolved_head_dim
+        if planar:
+            return KV.CacheDescriptor("gqa", planes=tuple(
+                KV.PlaneSpec(n, cfg.n_layers, (hkv, hd), "uint8")
+                for n in ("k_hi", "k_lo", "v_hi", "v_lo")))
+        return KV.CacheDescriptor("gqa", planes=(
+            KV.PlaneSpec("k", cfg.n_layers, (hkv, hd), cd),
+            KV.PlaneSpec("v", cfg.n_layers, (hkv, hd), cd)))
     if planar:
-        return {"attn": {k: jnp.zeros(shp, jnp.uint8)
-                         for k in ("k_hi", "k_lo", "v_hi", "v_lo")}}
-    return {"attn": {"k": jnp.zeros(shp, CACHE_DTYPE),
-                     "v": jnp.zeros(shp, CACHE_DTYPE)}}
+        raise ValueError("byte-planar NestedKV applies to GQA K/V planes "
+                         "only, not SSM/hybrid state")
+    d_inner, n_heads, _ = M2.ssm_dims(cfg)
+    s = cfg.ssm
+    gn2 = 2 * s.n_groups * s.d_state
+    slot_planes = (
+        KV.SlotPlaneSpec("conv_x", (cfg.n_layers, s.conv_width - 1, d_inner),
+                         cd),
+        KV.SlotPlaneSpec("conv_bc", (cfg.n_layers, s.conv_width - 1, gn2),
+                         cd),
+        KV.SlotPlaneSpec("ssm", (cfg.n_layers, n_heads, s.head_dim,
+                                 s.d_state), "float32"),
+    )
+    if kind == "ssm":
+        return KV.CacheDescriptor("ssm", slot_planes=slot_planes,
+                                  prefix_cacheable=False)
+    if not cfg.attn_every or cfg.n_layers % cfg.attn_every:
+        # paged hybrid execution is grouped (one shared-attn application
+        # per attn_every layers); fail at descriptor construction rather
+        # than mid-trace on the first engine step
+        raise ValueError(
+            f"hybrid paged serving requires attn_every | n_layers, got "
+            f"{cfg.n_layers} % {cfg.attn_every}")
+    n_apps = cfg.n_layers // cfg.attn_every          # hybrid
+    hkv, hd = cfg.n_kv_heads, cfg.resolved_head_dim
+    return KV.CacheDescriptor(
+        "hybrid",
+        planes=(KV.PlaneSpec("k", n_apps, (hkv, hd), cd),
+                KV.PlaneSpec("v", n_apps, (hkv, hd), cd)),
+        slot_planes=slot_planes, prefix_cacheable=False)
+
+
+def init_paged_cache(cfg: ArchConfig, n_total_blocks: int, block_size: int,
+                     n_slots: int | None = None,
+                     planar: bool = False) -> dict:
+    """Descriptor-driven serving cache pytree. Paged planes are shaped
+    (L, NB, BS, *token_shape) with NO batch dim — sequences own block
+    ids, not rows (serving/kvcache.py BlockManager; physical block 0 is
+    the trash block). Slot-resident planes (hybrid/ssm descriptors) are
+    shaped (L, n_slots, ...) — `n_slots` is required for those families.
+    planar=True stores GQA byte planes (NestedKV on paged blocks).
+
+    Subtree keys match the legacy cache convention so model code is
+    layout-agnostic: "attn" (gqa/mla paged planes), "shared" (hybrid's
+    paged shared-attention planes), "ssm" (slot-resident state)."""
+    desc = cache_descriptor(cfg, planar=planar)
+    out: dict[str, Any] = {}
+    if desc.planes:
+        key = "shared" if desc.kind == "hybrid" else "attn"
+        out[key] = {
+            p.name: jnp.zeros((p.n_layers, n_total_blocks, block_size)
+                              + p.token_shape, jnp.dtype(p.dtype))
+            for p in desc.planes}
+    if desc.slot_planes:
+        if n_slots is None:
+            raise ValueError(f"{desc.kind} descriptor has slot-resident "
+                             "state; init_paged_cache needs n_slots")
+        out["ssm"] = {
+            p.name: jnp.zeros((p.shape[0], n_slots) + tuple(p.shape[1:]),
+                              jnp.dtype(p.dtype))
+            for p in desc.slot_planes}
+    return out
 
 
 def planarize_cache(caches: dict) -> dict:
@@ -288,11 +361,13 @@ def _acc_aux(acc, aux):
 
 def _run_hybrid_grouped(rt, stacked, cfg, x, *, phase, positions,
                         kv_len=None, caches=None, shared_params=None,
-                        shared_caches=None):
+                        shared_caches=None, paged=None):
     """zamba2 grouped execution: outer scan over n_groups, each group =
     inner scan over attn_every mamba layers + one shared-attention
-    application. The shared cache (n_groups, B, Cap, hkv, hd) rides the
-    outer scan's xs/ys, so each group touches only its own slice."""
+    application. The shared cache (n_groups, B, Cap, hkv, hd) — or, for
+    phase "paged", the block-pooled (n_groups, NB, BS, hkv, hd) planes —
+    rides the outer scan's xs/ys, so each group touches only its own
+    slice."""
     every = cfg.attn_every
     n_layers = jax.tree_util.tree_leaves(stacked)[0].shape[0]
     n_groups = n_layers // every
@@ -307,7 +382,7 @@ def _run_hybrid_grouped(rt, stacked, cfg, x, *, phase, positions,
             # SSD scan + causal conv consume the full sequence, so GSPMD
             # must all-gather the hint right back (1.96 s -> 4.42 s).
             hh, new_c = apply_ssm_block(rt, lx["p"], cfg, hh, phase=phase,
-                                        cache=lx.get("c"))
+                                        cache=lx.get("c"), kv_len=kv_len)
             return hh, ({"c": new_c} if new_c is not None else {})
 
         inner_xs = {"p": xs["p"]}
@@ -323,7 +398,7 @@ def _run_hybrid_grouped(rt, stacked, cfg, x, *, phase, positions,
         else:
             h, new_shared, _, _ = apply_decoder_block(
                 rt, shared_params, cfg, h, phase=phase, positions=positions,
-                cache=xs.get("s"), kv_len=kv_len)
+                cache=xs.get("s"), kv_len=kv_len, paged=paged)
             if phase == "prefill":
                 # pad (B, S, ...) up to the pre-allocated capacity slice
                 def pad_to(full, one):
@@ -391,7 +466,8 @@ def run_decoder_stack(rt, stacked, cfg, x, *, phase, positions, kv_len=None,
 
 
 def run_ssm_stack(rt, stacked, cfg, x, *, phase, positions, kv_len=None,
-                  caches=None, shared_params=None, shared_caches=None):
+                  caches=None, shared_params=None, shared_caches=None,
+                  paged=None):
     """Mamba2 stack; zamba2 interleaves the shared attention block.
 
     When attn_every divides n_layers the hybrid path uses a GROUPED outer
@@ -408,12 +484,16 @@ def run_ssm_stack(rt, stacked, cfg, x, *, phase, positions, kv_len=None,
                                    positions=positions, kv_len=kv_len,
                                    caches=caches,
                                    shared_params=shared_params,
-                                   shared_caches=shared_caches)
+                                   shared_caches=shared_caches, paged=paged)
+    if hybrid and phase == "paged":
+        raise NotImplementedError(
+            "paged hybrid serving requires attn_every | n_layers "
+            "(grouped execution); no assigned arch hits this")
 
     def body(carry, xs):
         h, shared_c, aux_acc = carry
         h, new_c = apply_ssm_block(rt, xs["p"], cfg, h, phase=phase,
-                                   cache=xs.get("c"))
+                                   cache=xs.get("c"), kv_len=kv_len)
         if hybrid:
             li = xs["i"]
             app_idx = li // cfg.attn_every
@@ -638,23 +718,37 @@ def prefill(rt, params, cfg, batch, *, capacity: int | None = None,
 
 
 def paged_step(rt, params, cfg, tokens, caches, block_tables, *,
-               q_offset, kv_len, block_size: int, logit_position=None):
-    """One step over a block-paged cache — covers BOTH batched decode
-    (C=1 across all rows) and chunked prefill (one row, C=chunk tokens).
+               q_offset, kv_len, block_size: int, logit_position=None,
+               slot=None):
+    """One step over a descriptor-shaped paged cache — covers BOTH
+    batched decode (C=1 across all rows) and chunked prefill (one row,
+    C=chunk tokens) for every engine-served family: GQA K/V planes, MLA
+    `c_kv`+`k_rope` latent planes (absorbed attention), and hybrid/ssm
+    stacks whose paged shared-attention planes pair with slot-resident
+    SSM state.
 
-    tokens:       (B, C) int32, right-padded chunks.
+    tokens:       (B, C) int32, right-padded chunks (GQA/MLA only —
+                  recurrent state would absorb pads, so ssm/hybrid
+                  chunks are exact-length).
     block_tables: (B, MB) int32 physical block ids in logical order
                   (holes = trash block 0).
     q_offset:     (B,) absolute position of tokens[:, 0].
     kv_len:       (B,) valid cache tokens AFTER this chunk is written,
                   i.e. q_offset + real_chunk_len (0 disables a row:
-                  all its writes go to the trash block).
+                  all its paged writes go to the trash block and its
+                  slot-resident state is kept verbatim).
     logit_position: (B,) column of the last real token per row (traced —
                   one compile per (mode, C) regardless of chunk fill).
+    slot:         traced scalar slot index for single-row chunks of
+                  families with slot-resident state: the chunk reads and
+                  writes only that slot's state row (B must be 1).
+                  None = caches' slot axis matches B (batched decode).
 
     Returns (logits (B, V), new caches). Pad columns write to the trash
     block and their outputs are never read; chunked and monolithic
-    prefill therefore produce bit-identical logits for real tokens.
+    prefill therefore produce bit-identical logits for real tokens
+    (attention families — SSD state rounding is chunk-boundary-dependent
+    for ssm/hybrid).
 
     Block tables may alias: several rows (or several sequences across
     steps) may point at the SAME physical blocks — COW prefix caching
@@ -664,8 +758,9 @@ def paged_step(rt, params, cfg, tokens, caches, block_tables, *,
     guarantees writes only ever target unshared blocks by COW-forking
     before the step runs.
     """
-    if cfg.family not in ("dense", "moe", "vlm") or cfg.mla is not None:
-        raise ValueError("paged_step serves GQA attention families only")
+    fam = cfg.family
+    if fam == "encdec":
+        raise ValueError("paged_step serves decoder-only archs")
     b, c = tokens.shape
     tables = jnp.asarray(block_tables, jnp.int32)
     q_offset = jnp.asarray(q_offset, jnp.int32)
@@ -683,17 +778,39 @@ def paged_step(rt, params, cfg, tokens, caches, block_tables, *,
                  + offs[None, None, :]).reshape(b, mb * block_size)
 
     h = embed_tokens(rt, params, cfg, tokens)
-    h, new_attn, _, aux = run_decoder_stack(
-        rt, params["layers"], cfg, h, phase="paged", positions=positions,
-        kv_len=kv_len, caches=caches["attn"],
-        paged=(phys_write, phys_read, q_offset))
+    if fam in ("dense", "moe", "vlm"):
+        h, new_attn, _, aux = run_decoder_stack(
+            rt, params["layers"], cfg, h, phase="paged", positions=positions,
+            kv_len=kv_len, caches=caches["attn"],
+            paged=(phys_write, phys_read, q_offset))
+        new_caches = {"attn": new_attn}
+    else:                                            # ssm / hybrid
+        ssm_in = caches["ssm"]
+        if slot is not None:
+            ssm_in = jax.tree.map(
+                lambda a: jax.lax.dynamic_slice_in_dim(a, slot, 1, axis=1),
+                ssm_in)
+        h, new_ssm, new_shared, aux = run_ssm_stack(
+            rt, params["layers"], cfg, h, phase="paged",
+            positions=positions, kv_len=kv_len, caches=ssm_in,
+            shared_params=params.get("shared_attn"),
+            shared_caches=caches.get("shared"),
+            paged=(phys_write, phys_read, q_offset))
+        if slot is not None:
+            new_ssm = jax.tree.map(
+                lambda full, one: jax.lax.dynamic_update_slice_in_dim(
+                    full, one.astype(full.dtype), slot, axis=1),
+                caches["ssm"], new_ssm)
+        new_caches = {"ssm": new_ssm}
+        if new_shared is not None:
+            new_caches["shared"] = new_shared
     if logit_position is None:
         hsel = h[:, -1:]
     else:
         lp = jnp.asarray(logit_position, jnp.int32)
         hsel = jnp.take_along_axis(h, lp[:, None, None], axis=1)
     logits = lm_logits(rt, params, cfg, hsel)[:, 0]
-    return logits, {"attn": new_attn}
+    return logits, new_caches
 
 
 def decode_step(rt, params, cfg, tokens, caches, cache_len):

@@ -13,11 +13,25 @@ costs nothing — the engine simply dispatches to the other pre-compiled
 executable (paper §5.3 "per-iteration precision switching"), and the
 measured wall time of every step feeds the controller's p90 tracker.
 
-GQA attention families (dense/moe/vlm, non-MLA) run the paged path —
-including the byte-planar NestedKV layout on paged blocks. SSM/hybrid/
-MLA cache families keep the legacy fixed-slot layout.
+EVERY decoder-only family runs the paged path — there is ONE scheduling
+path. Cache layouts are per-family descriptors (kvcache.py
+`CacheDescriptor`): GQA K/V planes (incl. the byte-planar NestedKV
+layout on paged blocks), MLA `c_kv`+`k_rope` latent planes (absorbed
+latent attention over gathered blocks), and hybrid/ssm descriptors that
+pair paged shared-attention planes with slot-resident Mamba2 state
+(claimed per-slot via SlotManager in lockstep with the block tables and
+zeroed at (re-)admission). Because MLA latent and hybrid shared-attn
+blocks live in the same pool, the controller's `free_block_frac` FP8
+trigger sees deepseek/zamba-class memory pressure too. The legacy
+fixed-slot scheduling path (`_admit_legacy`/`_decode_legacy`) is
+retired.
 
-Copy-on-write prefix caching (paged path, on by default): at admission
+Recurrent families (ssm/hybrid) prefill with EXACT-length chunks (pad
+tokens would be absorbed into the state) and disable prefix caching (a
+cached KV prefix cannot stand in for slot-resident SSM state); batched
+decode masks state writes on inactive rows.
+
+Copy-on-write prefix caching (gqa/mla, on by default): at admission
 the engine matches the longest cached full-block prefix of the request's
 token stream (kvcache.py chain-hash index), attaches those blocks with
 zero recompute, and starts chunked prefill at the matched offset —
@@ -32,16 +46,16 @@ order, so shared physical blocks are transparent to `paged_step` and the
 planar decode kernel alike. `prefix_cache_stats()` reports hit-rate and
 blocks saved.
 
-Greedy sampling; chunk/prompt lengths are bucketed and jit caches key on
-(mode, bucket) with positions passed as traced arguments, so distinct
-prompt lengths share one executable per bucket.
+Greedy sampling; attention-family chunk lengths are bucketed and jit
+caches key on (mode, bucket) with positions and slot index passed as
+traced arguments, so distinct prompt lengths share one executable per
+bucket (recurrent families compile per exact chunk length instead).
 """
 
 from __future__ import annotations
 
 import collections
 import dataclasses
-import itertools
 import time
 from typing import Any, Callable
 
@@ -93,7 +107,7 @@ class Engine:
                  forced_mode: str | None = None, backend: str = "ref",
                  kv_planar: bool = False,
                  clock: Callable[[], float] = time.monotonic,
-                 paged: bool | None = None, block_size: int = 16,
+                 block_size: int = 16,
                  n_blocks: int | None = None, chunk_tokens: int = 256,
                  prefix_cache: bool = True):
         self.cfg = cfg
@@ -104,9 +118,16 @@ class Engine:
         self.n_slots = n_slots
         self.capacity = capacity
         self.chunk_tokens = chunk_tokens
-        attn_ok = cfg.family in ("dense", "moe", "vlm") and cfg.mla is None
-        self.paged = attn_ok if paged is None else (bool(paged) and attn_ok)
-        self.kv_planar = kv_planar and attn_ok
+        self.kv_planar = kv_planar and cfg.cache_kind == "gqa"
+        # raises NotImplementedError for enc-dec — engine serves
+        # decoder-only archs (enc-dec is covered by dry-run + benchmarks)
+        self.desc = M.cache_descriptor(cfg, planar=self.kv_planar)
+        # recurrent state can't be re-attached from cached KV blocks
+        prefix_cache = prefix_cache and self.desc.prefix_cacheable
+        # pad tokens are invisible to attention (causal mask + trash
+        # block) but would be absorbed into SSM state: recurrent
+        # families prefill with exact-length chunks instead of buckets
+        self._pad_chunks = not self.desc.slot_planes
         self.queue: collections.deque[Request] = collections.deque()
         self.active: dict[int, Request] = {}
         self.prefilling: dict[int, _Prefill] = {}
@@ -117,39 +138,43 @@ class Engine:
         self._last_step_ms: float | None = None
         self._rts = {m: Runtime(mode=m, backend=backend, dtype=jnp.float32)
                      for m in ("fp16", "fp8")}
-        if self.paged:
-            self.block_size = block_size
-            mbs = -(-capacity // block_size)
-            if n_blocks is None:
-                n_blocks = n_slots * mbs     # dense-equivalent pool by default
-            self.slots = None
-            self.blocks = BlockManager(n_slots, block_size, n_blocks, mbs,
-                                       prefix_cache=prefix_cache)
-            self.caches = M.init_paged_cache(
-                cfg, self.blocks.n_total_blocks, block_size,
-                planar=self.kv_planar)
-            # one compile: src/dst are traced scalars into the block axis;
-            # donating the cache lets XLA update the one block in place
-            # instead of materializing a whole-pool copy per COW fork
-            self._copy_block = jax.jit(
-                lambda c, s, d: jax.tree.map(
-                    lambda a: a.at[:, d].set(a[:, s]), c),
+        self.block_size = block_size
+        mbs = -(-capacity // block_size)
+        if n_blocks is None:
+            n_blocks = n_slots * mbs         # dense-equivalent pool by default
+        self.blocks = BlockManager(n_slots, block_size, n_blocks, mbs,
+                                   prefix_cache=prefix_cache)
+        # slot-resident state side (hybrid/ssm descriptors): SlotManager
+        # tracks per-slot occupancy in lockstep with the block tables
+        self.slot_state = SlotManager(n_slots, capacity) \
+            if self.desc.slot_planes else None
+        self.caches = M.init_paged_cache(
+            cfg, self.blocks.n_total_blocks, block_size, n_slots=n_slots,
+            planar=self.kv_planar)
+        # one compile: src/dst are traced scalars into the block axis;
+        # donating the cache lets XLA update the one block in place
+        # instead of materializing a whole-pool copy per COW fork.
+        # Only paged-plane subtrees are touched — slot-resident state
+        # ("ssm") has a slot axis, not a block axis.
+        self._copy_block = jax.jit(
+            lambda c, s, d: {
+                k: (jax.tree.map(lambda a: a.at[:, d].set(a[:, s]), sub)
+                    if k in ("attn", "shared") else sub)
+                for k, sub in c.items()},
+            donate_argnums=(0,))
+        if self.slot_state is not None:
+            # zero one slot's recurrent state at (re-)admission
+            self._zero_slot = jax.jit(
+                lambda c, i: {
+                    k: (jax.tree.map(lambda a: a.at[:, i].set(0), sub)
+                        if k == "ssm" else sub)
+                    for k, sub in c.items()},
                 donate_argnums=(0,))
-            self._decode = {
-                m: jax.jit(lambda p, c, t, tab, qo, kvl, _m=m: M.paged_step(
-                    self._rts[_m], p, cfg, t, c, tab, q_offset=qo,
-                    kv_len=kvl, block_size=block_size))
-                for m in ("fp16", "fp8")}
-        else:
-            self.slots = SlotManager(n_slots, capacity)
-            self.blocks = None
-            self.caches = M.init_cache(cfg, n_slots, capacity,
-                                       planar=self.kv_planar)
-            self._decode = {
-                m: jax.jit(lambda p, c, t, l, _m=m: M.decode_step(
-                    self._rts[_m], p, cfg, t, c, l))
-                for m in ("fp16", "fp8")}
-        self._prefill_cache: dict[tuple[str, int], Any] = {}
+        self._decode = {
+            m: jax.jit(lambda p, c, t, tab, qo, kvl, _m=m: M.paged_step(
+                self._rts[_m], p, cfg, t, c, tab, q_offset=qo,
+                kv_len=kvl, block_size=block_size))
+            for m in ("fp16", "fp8")}
         self._chunk_cache: dict[tuple[str, int], Any] = {}
         self.iteration = 0
 
@@ -166,15 +191,12 @@ class Engine:
         return self.finished
 
     def block_utilization(self) -> float:
-        return self.blocks.utilization() if self.paged else \
-            self.slots.utilization()
+        return self.blocks.utilization()
 
     def prefix_cache_stats(self) -> dict:
         """Prefix-cache effectiveness: hit rate over prompt tokens looked
-        up at admission, blocks saved by sharing, COW forks, LRU churn."""
-        if not self.paged:
-            return {"hit_rate": 0.0, "blocks_saved": 0, "hit_tokens": 0,
-                    "cached_blocks": 0, "cow_forks": 0, "evictions": 0}
+        up at admission, blocks saved by sharing, COW forks, LRU churn
+        (all-zero for recurrent descriptors, which disable the cache)."""
         ps = self.blocks.prefix_stats
         denom = ps["lookup_tokens"]
         return {"hit_rate": ps["hit_tokens"] / denom if denom else 0.0,
@@ -202,25 +224,17 @@ class Engine:
     def step(self) -> None:
         self.iteration += 1
         t0 = self.clock()
-        if self.paged:
-            plan = self._plan_chunks()
-            mode = self._mode(len(self.active),
-                              sum(take for _, _, take in plan),
-                              free_block_frac=self.blocks.free_block_frac())
-            for idx, start, take in plan:
-                # a COW-fork failure inside an earlier chunk may have
-                # preempted a later plan entry — skip stale entries
-                if idx in self.prefilling:
-                    self._run_chunk(mode, idx, start, take)
-            self._decode_paged(mode)
-            self._sample_peak()
-        else:
-            batch_tokens = len(self.active) + sum(
-                len(r.tokens) for r in itertools.islice(
-                    self.queue, self.slots.n_free()))
-            mode = self._mode(batch_tokens, 0)
-            self._admit_legacy(mode)
-            self._decode_legacy(mode)
+        plan = self._plan_chunks()
+        mode = self._mode(len(self.active),
+                          sum(take for _, _, take in plan),
+                          free_block_frac=self.blocks.free_block_frac())
+        for idx, start, take in plan:
+            # a COW-fork failure inside an earlier chunk may have
+            # preempted a later plan entry — skip stale entries
+            if idx in self.prefilling:
+                self._run_chunk(mode, idx, start, take)
+        self._decode_paged(mode)
+        self._sample_peak()
         # wall time of this step feeds the controller's p90 tracker on the
         # NEXT decision (measured-latency fallback to FP8, paper §3.2)
         self._last_step_ms = (self.clock() - t0) * 1e3
@@ -244,10 +258,6 @@ class Engine:
         budget, a slot, and enough free blocks for their WHOLE prompt are
         available (the admission watermark — decode growth may still
         preempt, but admissions never immediately thrash)."""
-        if self.cfg.family == "encdec":
-            raise NotImplementedError(
-                "engine serves decoder-only archs; enc-dec serving is "
-                "covered by the dry-run + benchmarks")
         plan: list[tuple[int, int, int]] = []
         budget = self.chunk_tokens
         order = sorted(self.prefilling,
@@ -271,6 +281,13 @@ class Engine:
             if idx is None:
                 break
             self.queue.popleft()
+            if self.slot_state is not None:
+                # slot-resident state side: claim the same slot index and
+                # zero its recurrent state (recompute after preemption
+                # must restart the recurrence from scratch)
+                self.slot_state.claim(idx, req.request_id, len(seq_tokens),
+                                      req.max_new - len(req.output))
+                self.caches = self._zero_slot(self.caches, jnp.int32(idx))
             # longest cached full-block prefix is shared (incref, zero
             # recompute); prefill starts at the matched offset but always
             # recomputes >= 1 token so the first-token logit is produced
@@ -289,14 +306,21 @@ class Engine:
         return plan
 
     def _chunk_fn(self, mode: str, bucket: int):
+        """Single-row prefill chunk executable. For slot-resident
+        descriptors the traced `slot` routes the chunk's state
+        read/write to one state row; attention-only descriptors ignore
+        it (jit caches still key on (mode, bucket) alone)."""
         key = (mode, bucket)
         if key not in self._chunk_cache:
             rt, cfg, bs = self._rts[mode], self.cfg, self.block_size
+            slotted = self.slot_state is not None
 
-            def fn(p, caches, tokens, table, q_offset, kv_len, logit_pos):
+            def fn(p, caches, tokens, table, q_offset, kv_len, logit_pos,
+                   slot):
                 return M.paged_step(rt, p, cfg, tokens, caches, table,
                                     q_offset=q_offset, kv_len=kv_len,
-                                    block_size=bs, logit_position=logit_pos)
+                                    block_size=bs, logit_position=logit_pos,
+                                    slot=slot if slotted else None)
             self._chunk_cache[key] = jax.jit(fn)
         return self._chunk_cache[key]
 
@@ -332,15 +356,17 @@ class Engine:
         st = self.prefilling[idx]
         if not self._cow_or_preempt(idx, start, start + take):
             return
-        bucket = _bucket(take)
+        # recurrent descriptors chunk at exact length (pads would be
+        # absorbed into the SSM state); attention ones bucket + right-pad
+        bucket = _bucket(take) if self._pad_chunks else take
         toks = np.zeros((1, bucket), np.int32)
-        toks[0, :take] = st.seq_tokens[start: start + take]   # right-pad
+        toks[0, :take] = st.seq_tokens[start: start + take]
         logits, self.caches = self._chunk_fn(mode, bucket)(
             self.params, self.caches, jnp.asarray(toks),
             jnp.asarray(self.blocks.table(idx)[None]),
             jnp.asarray([start], np.int32),
             jnp.asarray([start + take], np.int32),
-            jnp.asarray([take - 1], np.int32))
+            jnp.asarray([take - 1], np.int32), jnp.int32(idx))
         st.done = start + take
         self.blocks.commit(idx, st.done, st.seq_tokens)
         self.stats["chunks"] += 1
@@ -373,6 +399,8 @@ class Engine:
         else:
             req = self.prefilling.pop(victim).req
         self.blocks.release(victim)
+        if self.slot_state is not None:
+            self.slot_state.release(victim)
         self.lens[victim] = 0
         self.queue.appendleft(req)
 
@@ -385,6 +413,8 @@ class Engine:
             req.finished_s = now
             self.finished.append(self.active.pop(idx))
             self.blocks.release(idx)
+            if self.slot_state is not None:
+                self.slot_state.release(idx)
             self.lens[idx] = 0
 
     def _decode_paged(self, mode: str) -> None:
@@ -434,92 +464,3 @@ class Engine:
             req.modes.append(mode)
             self._maybe_retire(idx, now)
 
-    # =========================================================================
-    # legacy fixed-slot path (SSM/hybrid/MLA cache families)
-    # =========================================================================
-    def _prefill_fn(self, mode: str, bucket: int):
-        """Prompts are RIGHT-padded to `bucket` for attention archs (causal
-        masking makes the pad suffix invisible to real tokens; the pad
-        region of the cache is masked out by per-slot lengths). SSM/hybrid
-        state would absorb pad tokens, so those archs prefill at exact
-        length (bucket == plen). The logit position is a traced argument,
-        so the jit cache keys on (mode, bucket) alone."""
-        key = (mode, bucket)
-        if key not in self._prefill_cache:
-            rt = self._rts[mode]
-            cfg = self.cfg
-
-            def fn(p, tokens, logit_position):
-                logits, caches, _ = M.prefill(rt, p, cfg,
-                                              {"tokens": tokens},
-                                              capacity=self.slots.capacity,
-                                              logit_position=logit_position)
-                if self.kv_planar:
-                    caches = M.planarize_cache(caches)
-                return logits, caches
-            self._prefill_cache[key] = jax.jit(fn)
-        return self._prefill_cache[key]
-
-    def _admit_legacy(self, mode: str) -> None:
-        if self.cfg.family == "encdec":
-            raise NotImplementedError(
-                "engine serves decoder-only archs; enc-dec serving is "
-                "covered by the dry-run + benchmarks")
-        pad_ok = self.cfg.family in ("dense", "moe", "vlm")
-        while self.queue and self.slots.n_free() > 0:
-            req = self.queue[0]
-            idx = self.slots.try_allocate(req.request_id, len(req.tokens),
-                                          req.max_new)
-            if idx is None:
-                return
-            self.queue.popleft()
-            plen = len(req.tokens)
-            bucket = _bucket(plen) if pad_ok else plen
-            toks = np.zeros((1, bucket), np.int32)
-            toks[0, :plen] = req.tokens               # right-pad
-            logits, pc = self._prefill_fn(mode, bucket)(
-                self.params, jnp.asarray(toks), jnp.int32(plen - 1))
-            # install the prefilled caches into the slot
-            self.caches = jax.tree.map(
-                lambda full, one: full.at[:, idx].set(
-                    one[:, 0].astype(full.dtype))
-                if full.ndim >= 2 else full, self.caches, pc)
-            self.lens[idx] = plen
-            tok = int(np.asarray(jnp.argmax(logits, -1))[0])
-            req.output.append(tok)
-            now = self.clock()
-            req.first_token_s = now
-            req.token_times.append(now)
-            req.modes.append(mode)
-            self.active[idx] = req
-            self.slots.slots[idx].generated = 1
-
-    def _decode_legacy(self, mode: str) -> None:
-        if not self.active:
-            return
-        tokens = np.zeros((self.n_slots, 1), np.int32)
-        for idx, req in self.active.items():
-            tokens[idx, 0] = req.output[-1]
-        logits, self.caches = self._decode[mode](
-            self.params, self.caches, jnp.asarray(tokens),
-            jnp.asarray(self.lens))
-        nxt = np.asarray(jnp.argmax(logits, -1))
-        now = self.clock()
-        done = []
-        for idx, req in list(self.active.items()):
-            self.lens[idx] += 1
-            req.output.append(int(nxt[idx]))
-            req.token_times.append(now)
-            req.modes.append(mode)
-            slot = self.slots.slots[idx]
-            slot.generated += 1
-            slot.length += 1
-            # length >= capacity, not length+1 (see _maybe_retire)
-            if slot.generated >= req.max_new \
-                    or slot.length >= self.slots.capacity:
-                req.finished_s = now
-                done.append(idx)
-        for idx in done:
-            self.finished.append(self.active.pop(idx))
-            self.slots.release(idx)
-            self.lens[idx] = 0

@@ -1,20 +1,38 @@
-"""KV-cache managers for the continuous-batching engine.
+"""KV-cache managers + per-family cache descriptors for the engine.
 
-Two layouts:
+Every serving-relevant architecture is described by a `CacheDescriptor`:
+a set of token-granular PAGED planes (block-pooled, managed by
+`BlockManager`) plus, for recurrent families, SLOT-RESIDENT planes
+(fixed per-sequence state with no token axis, tracked by `SlotManager`).
+The four descriptor kinds:
 
-* `SlotManager` — legacy fixed-slot layout: a pool of `n_slots` sequence
-  slots, each pre-reserving `capacity` token positions in the model's
-  stacked cache pytree (batch dim = slot). Still used for cache families
-  without paged support (SSM state, MLA latents, enc-dec memories).
+* `gqa`    — K/V pairs per layer (optionally byte-planar NestedKV);
+             all planes paged.
+* `mla`    — DeepSeek latent planes `c_kv` + `k_rope` per layer;
+             all planes paged (576 f16 values/token for deepseek-v3).
+* `hybrid` — zamba2-class: the shared-attention K/V planes are paged
+             (one logical layer per application group) while the
+             Mamba2 conv + SSD state is slot-resident.
+* `ssm`    — pure Mamba2: slot-resident state only; block tables
+             degenerate to token-length accounting.
 
-* `BlockManager` — block-paged layout (the paper's §3.3 serving story:
-  KV memory bounds the admissible batch, so reserving `capacity` tokens
-  per slot wastes exactly the HBM that NestedFP's zero-overhead weights
-  reclaim). Physical KV lives in a pool of fixed-size token blocks;
-  each sequence owns an ordered block table and grows one block at a
-  time. Admission is driven by free blocks, not free slots, and when
-  blocks run out the youngest sequence is preempted (blocks released,
-  request recomputed later — vLLM-style recompute preemption).
+`BlockManager` is the paged side (the paper's §3.3 serving story: KV
+memory bounds the admissible batch, so reserving `capacity` tokens per
+slot wastes exactly the HBM that NestedFP's zero-overhead weights
+reclaim). Physical KV lives in a pool of fixed-size token blocks; each
+sequence owns an ordered block table and grows one block at a time.
+Admission is driven by free blocks, not free slots, and when blocks run
+out the youngest sequence is preempted (blocks released, request
+recomputed later — vLLM-style recompute preemption). Because MLA latent
+and hybrid shared-attention blocks live in the same pool abstraction,
+the controller's `free_block_frac` memory-pressure trigger sees
+deepseek/zamba-class sequences exactly like GQA ones.
+
+`SlotManager` is the slot-resident side of the `hybrid`/`ssm`
+descriptors: one state slot per sequence, claimed in lockstep with the
+BlockManager slot index (`claim`), zeroed at (re-)admission. The legacy
+fixed-slot ENGINE path that used it for whole KV caches is retired —
+every family now schedules through the paged path.
 
 Physical block 0 is reserved as a trash block: jit'd steps always write
 a full (possibly padded) chunk, and pad/inactive-row writes are pointed
@@ -57,6 +75,75 @@ import dataclasses
 import numpy as np
 
 
+# ---------------------------------------------------------------------------
+# cache descriptors (per-family layouts; factory: models/model.py
+# `cache_descriptor(cfg)`)
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass(frozen=True)
+class PlaneSpec:
+    """One token-granular cache plane, paged into fixed-size blocks.
+
+    A pool leaf is shaped (n_layers, n_total_blocks, block_size,
+    *token_shape); `token_shape` is the per-token feature shape (GQA:
+    (Hkv, Hd); MLA c_kv: (kv_lora_rank,))."""
+    name: str
+    n_layers: int
+    token_shape: tuple[int, ...]
+    dtype: str                          # numpy dtype name
+
+    @property
+    def bytes_per_token(self) -> int:
+        return int(self.n_layers * np.prod(self.token_shape, dtype=np.int64)
+                   * np.dtype(self.dtype).itemsize)
+
+
+@dataclasses.dataclass(frozen=True)
+class SlotPlaneSpec:
+    """Slot-resident (non-paged) state: one fixed-shape entry per
+    sequence slot, no token axis. A pool leaf is shaped
+    (shape[0], n_slots, *shape[1:]) — batch rides axis 1, matching the
+    layer-stacked cache convention."""
+    name: str
+    shape: tuple[int, ...]              # per-slot shape incl. layer dim
+    dtype: str
+
+    @property
+    def bytes_per_slot(self) -> int:
+        return int(np.prod(self.shape, dtype=np.int64)
+                   * np.dtype(self.dtype).itemsize)
+
+
+@dataclasses.dataclass(frozen=True)
+class CacheDescriptor:
+    """Per-family cache layout: which planes are paged (BlockManager)
+    and which are slot-resident (SlotManager). `prefix_cacheable` is
+    False for recurrent families — a cached KV prefix cannot stand in
+    for slot-resident SSM state, so sharing blocks would skip state
+    recomputation."""
+    kind: str                           # "gqa" | "mla" | "hybrid" | "ssm"
+    planes: tuple[PlaneSpec, ...] = ()
+    slot_planes: tuple[SlotPlaneSpec, ...] = ()
+    prefix_cacheable: bool = True
+
+    @property
+    def paged(self) -> bool:
+        return bool(self.planes)
+
+    @property
+    def bytes_per_token(self) -> int:
+        """Paged-plane bytes per cached token (0 for pure SSM)."""
+        return sum(p.bytes_per_token for p in self.planes)
+
+    def bytes_per_block(self, block_size: int) -> int:
+        return self.bytes_per_token * block_size
+
+    @property
+    def bytes_per_slot(self) -> int:
+        """Slot-resident state bytes per sequence (0 for gqa/mla)."""
+        return sum(p.bytes_per_slot for p in self.slot_planes)
+
+
 @dataclasses.dataclass
 class Slot:
     request_id: str | None = None
@@ -86,6 +173,14 @@ class SlotManager:
                 self.slots[i] = Slot(request_id, prompt_len, max_new, 0)
                 return i
         return None
+
+    def claim(self, idx: int, request_id: str, prompt_len: int,
+              max_new: int) -> None:
+        """Claim a SPECIFIC slot — used by the engine to keep the
+        slot-resident state side of a hybrid/ssm descriptor in lockstep
+        with the BlockManager's slot assignment."""
+        assert self.slots[idx].free, f"slot {idx} already claimed"
+        self.slots[idx] = Slot(request_id, prompt_len, max_new, 0)
 
     def release(self, idx: int) -> None:
         self.slots[idx] = Slot()

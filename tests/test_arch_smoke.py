@@ -12,6 +12,9 @@ import jax
 import jax.numpy as jnp
 import pytest
 
+# full per-arch sweep (11 archs x jit) — CI runs it in the slow lane
+pytestmark = pytest.mark.slow
+
 from repro.configs import ARCHS, ASSIGNED
 from repro.models import model as M
 from repro.models.convert import to_serving

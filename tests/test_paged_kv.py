@@ -1,8 +1,11 @@
 """Paged KV cache + chunked prefill: BlockManager invariants, chunked-vs-
-monolithic prefill bit-exactness, preemption correctness (recompute
-resumes exactly under greedy decoding), the paged planar decode kernel,
-and regression tests for the measured-p90 controller path and the
-capacity off-by-one."""
+monolithic prefill bit-exactness (GQA and MLA latent planes), preemption
+correctness (recompute resumes exactly under greedy decoding), MLA and
+hybrid descriptor serving through the ONE paged scheduling path, the
+paged planar decode kernel, and regression tests for the measured-p90
+controller path and the capacity off-by-one."""
+
+import dataclasses
 
 import numpy as np
 import jax
@@ -10,6 +13,7 @@ import jax.numpy as jnp
 import pytest
 
 from repro.configs import ARCHS
+from repro.configs.base import MLAConfig
 from repro.core import nestedfp as nf
 from repro.core.policy import DualPrecisionController, SLOConfig
 from repro.kernels.planar_decode_attention import paged_planar_decode_attention
@@ -23,6 +27,30 @@ from repro.serving.kvcache import TRASH_BLOCK, BlockManager
 @pytest.fixture(scope="module")
 def tiny():
     cfg = ARCHS["qwen1.5-0.5b"].reduced()
+    params = M.init_params(jax.random.PRNGKey(0), cfg)
+    return cfg, to_serving(params)
+
+
+def _tiny_mla_cfg():
+    """deepseek_coder_33b-shaped tiny config (dense llama-arch trunk)
+    with DeepSeek MLA attention — the latent-cache serving family."""
+    return dataclasses.replace(
+        ARCHS["deepseek-coder-33b"].reduced(),
+        arch_id="deepseek-coder-33b-mla-reduced",
+        mla=MLAConfig(kv_lora_rank=64, q_lora_rank=96, qk_rope_dim=16,
+                      qk_nope_dim=32, v_head_dim=32))
+
+
+@pytest.fixture(scope="module")
+def tiny_mla():
+    cfg = _tiny_mla_cfg()
+    params = M.init_params(jax.random.PRNGKey(0), cfg)
+    return cfg, to_serving(params)
+
+
+@pytest.fixture(scope="module")
+def tiny_hybrid():
+    cfg = ARCHS["zamba2-2.7b"].reduced()
     params = M.init_params(jax.random.PRNGKey(0), cfg)
     return cfg, to_serving(params)
 
@@ -85,6 +113,7 @@ class TestBlockManager:
         assert bm.youngest() is None
 
 
+@pytest.mark.slow
 class TestChunkedPrefill:
     def test_chunked_matches_monolithic_bit_exact(self, tiny):
         """FP16 logits of chunked prefill must be BIT-identical to a
@@ -155,6 +184,7 @@ class TestChunkedPrefill:
         assert len(fin["r0"].output) == 12 and len(fin["r1"].output) == 2
 
 
+@pytest.mark.slow
 class TestPreemption:
     def test_forced_preemption_completes_all_requests(self, tiny):
         """Scarce pool forces decode-growth preemption; recompute must
@@ -289,18 +319,30 @@ class TestEngineRegressions:
         assert ctrl.history[-1] == "fp16", "never recovered from FP8"
         assert len(eng.finished) == 1 and len(eng.finished[0].output) == 100
 
-    @pytest.mark.parametrize("paged", [True, False])
-    def test_capacity_boundary_not_truncated(self, tiny, paged):
+    def test_capacity_boundary_not_truncated(self, tiny):
         """prompt+max_new == capacity must yield ALL max_new tokens; the
         old `length + 1 >= capacity` retire check cut the last one."""
         cfg, sparams = tiny
         eng = Engine(cfg, sparams, n_slots=2, capacity=32,
-                     forced_mode="fp16", paged=paged)
+                     forced_mode="fp16")
         eng.submit(Request("r0", list(range(4, 12)), max_new=24))   # 8+24=32
         fin = eng.run()
         assert len(fin) == 1
         assert len(fin[0].output) == 24, \
             f"truncated at capacity: got {len(fin[0].output)}/24"
+
+    def test_legacy_fixed_slot_path_retired(self, tiny):
+        """ONE scheduling path: the legacy fixed-slot engine path is
+        gone — no `_admit_legacy`/`_decode_legacy`/`paged=` switch — and
+        every engine instance schedules on a BlockManager."""
+        cfg, sparams = tiny
+        assert not hasattr(Engine, "_admit_legacy")
+        assert not hasattr(Engine, "_decode_legacy")
+        with pytest.raises(TypeError):
+            Engine(cfg, sparams, n_slots=2, capacity=32, paged=False)
+        eng = Engine(cfg, sparams, n_slots=2, capacity=32,
+                     forced_mode="fp16")
+        assert isinstance(eng.blocks, BlockManager)
 
     def test_empty_prompt_rejected(self, tiny):
         cfg, sparams = tiny
@@ -428,6 +470,7 @@ class TestPrefixCacheBlockManager:
         assert bm.blocks_in_use() == 0
 
 
+@pytest.mark.slow
 class TestPrefixCacheEngine:
     def test_prefix_reuse_reduces_prefill_and_blocks(self, tiny):
         """N requests sharing a >=2-block prefix: prefilled tokens and
@@ -576,3 +619,294 @@ class TestPrefixCacheEngine:
         pairs = bm.cow_for_write(b, 0, 8)            # 2 of 3 fits
         assert pairs is not None and len(pairs) == 2
         bm.check_invariants()
+
+
+def _greedy_fixed_slot_reference(cfg, sparams, prompt, n_new):
+    """The pre-refactor fixed-slot arithmetic: monolithic M.prefill into
+    a capacity-reserved cache + one-token M.decode_step loop."""
+    rt = Runtime(mode="fp16", backend="ref", dtype=jnp.float32)
+    toks = jnp.asarray([prompt], jnp.int32)
+    cap = len(prompt) + n_new + 1
+    logits, caches, length = M.prefill(rt, sparams, cfg, {"tokens": toks},
+                                       capacity=cap)
+    out = [int(np.argmax(np.asarray(logits)[0]))]
+    for i in range(n_new - 1):
+        lg, caches = M.decode_step(
+            rt, sparams, cfg, jnp.asarray([[out[-1]]], jnp.int32),
+            caches, jnp.int32(length + i))
+        out.append(int(np.argmax(np.asarray(lg)[0])))
+    return out
+
+
+class TestMLAPagedServing:
+    """MLA latent caches (c_kv + k_rope planes) through the paged path:
+    mirrors the GQA chunked-prefill / prefix-cache / preemption cases on
+    a deepseek_coder_33b-shaped tiny config with MLA attention."""
+
+    @pytest.mark.slow
+    def test_chunked_matches_monolithic_bit_exact(self, tiny_mla):
+        """Chunked MLA prefill must be BIT-identical to a single-chunk
+        prefill: every chunk runs the same absorbed-latent arithmetic
+        over latents round-tripped through the same f16 paged planes."""
+        cfg, sparams = tiny_mla
+        rt = Runtime(mode="fp16", backend="ref", dtype=jnp.float32)
+        bs, mb = 16, 4
+        prompt = list(range(5, 18))                 # 13 tokens, odd split
+        plen = len(prompt)
+        table = np.zeros((1, mb), np.int32)
+        table[0, 0], table[0, 1] = 1, 2
+
+        def run(chunks):
+            caches = M.init_paged_cache(cfg, n_total_blocks=9, block_size=bs)
+            assert set(caches["attn"]) == {"c_kv", "k_rope"}
+            out, start = None, 0
+            for take in chunks:
+                toks = np.zeros((1, 16), np.int32)
+                toks[0, :take] = prompt[start: start + take]
+                out, caches = M.paged_step(
+                    rt, sparams, cfg, jnp.asarray(toks), caches,
+                    jnp.asarray(table),
+                    q_offset=jnp.asarray([start], jnp.int32),
+                    kv_len=jnp.asarray([start + take], jnp.int32),
+                    block_size=bs,
+                    logit_position=jnp.asarray([take - 1], jnp.int32))
+                start += take
+            assert start == plen
+            return np.asarray(out)
+
+        mono = run([plen])
+        assert (run([4, 4, 5]) == mono).all()       # crosses a block boundary
+        assert (run([1] * plen) == mono).all()      # token-at-a-time
+
+    def test_engine_matches_fixed_slot_reference(self, tiny_mla):
+        """Acceptance: MLA decode runs through `paged_step` with greedy
+        outputs matching the pre-refactor fixed-slot path exactly.
+        (Deliberately NOT marked slow — this is the CI fast lane's MLA
+        paged smoke test, so descriptor regressions fail in <2 min.)"""
+        cfg, sparams = tiny_mla
+        prompts = [list(range(5, 18)), list(range(40, 60))]
+        eng = Engine(cfg, sparams, n_slots=4, capacity=64,
+                     forced_mode="fp16")
+        for i, p in enumerate(prompts):
+            eng.submit(Request(f"r{i}", p, max_new=6))
+        fin = {r.request_id: r.output for r in eng.run()}
+        for i, p in enumerate(prompts):
+            ref = _greedy_fixed_slot_reference(cfg, sparams, p, 6)
+            assert fin[f"r{i}"] == ref, f"r{i} diverged from fixed-slot ref"
+
+    @pytest.mark.slow
+    def test_engine_chunked_equals_unchunked(self, tiny_mla):
+        cfg, sparams = tiny_mla
+        prompts = [list(range(3, 40)), list(range(60, 75))]
+        outs = []
+        for chunk in (8, 512):
+            eng = Engine(cfg, sparams, n_slots=4, capacity=64,
+                         forced_mode="fp16", chunk_tokens=chunk)
+            for i, p in enumerate(prompts):
+                eng.submit(Request(f"r{i}", p, max_new=5))
+            outs.append({r.request_id: r.output for r in eng.run()})
+        assert outs[0] == outs[1]
+
+    def test_bit_exact_with_prefix_caching_on_vs_off(self, tiny_mla):
+        """Greedy outputs with COW prefix caching over LATENT blocks on
+        == off, and sharing actually reduces prefilled tokens."""
+        cfg, sparams = tiny_mla
+        shared = list(range(11, 27))                 # 2 blocks of 8
+        prompts = [shared + list(range(40 + 3 * i, 43 + 3 * i))
+                   for i in range(3)]
+        runs = {}
+        for pc in (True, False):
+            eng = Engine(cfg, sparams, n_slots=4, capacity=64,
+                         forced_mode="fp16", block_size=8, chunk_tokens=19,
+                         prefix_cache=pc)
+            for i, p in enumerate(prompts):
+                eng.submit(Request(f"r{i}", p, max_new=4))
+            runs[pc] = ({r.request_id: r.output for r in eng.run()},
+                        eng.stats["chunk_tokens"], eng.prefix_cache_stats())
+        assert runs[True][0] == runs[False][0], \
+            "latent-block prefix sharing changed greedy outputs"
+        assert runs[True][1] < runs[False][1], "no prefill saving"
+        assert runs[True][2]["blocks_saved"] >= 2
+
+    @pytest.mark.slow
+    def test_preemption_reproduces_ample_pool_outputs(self, tiny_mla):
+        """Scarce latent pool forces decode-growth preemption; recompute
+        must resume exactly — outputs identical to an ample-pool run."""
+        cfg, sparams = tiny_mla
+        prompts = [list(range(4, 12)), list(range(30, 38)),
+                   list(range(90, 98))]
+
+        def run(n_blocks):
+            eng = Engine(cfg, sparams, n_slots=3, capacity=32,
+                         forced_mode="fp16", block_size=4,
+                         n_blocks=n_blocks)
+            for i, p in enumerate(prompts):
+                eng.submit(Request(f"r{i}", p, max_new=16))
+            fin = {r.request_id: r.output for r in eng.run()}
+            eng.blocks.check_invariants()
+            assert eng.blocks.n_free_blocks() == eng.blocks.n_blocks
+            return fin, eng.stats["preemptions"]
+
+        ample, p0 = run(n_blocks=24)
+        scarce, p1 = run(n_blocks=10)
+        assert p0 == 0 and p1 >= 1, (p0, p1)
+        assert ample == scarce, "preemption changed generated tokens"
+        assert all(len(o) == 16 for o in scarce.values())
+
+    @pytest.mark.slow
+    def test_free_block_frac_sees_latent_pressure(self, tiny_mla):
+        """The controller's memory-pressure FP8 trigger must fire on MLA
+        latent-block exhaustion (latency thresholds out of reach)."""
+        cfg, sparams = tiny_mla
+        ctrl = DualPrecisionController(
+            SLOConfig(tpot_ms=1e9, hysteresis_steps=2,
+                      free_block_frac_min=0.3),
+            fp16_ms_per_token=1e-9, fp8_ms_per_token=1e-9)
+        eng = Engine(cfg, sparams, n_slots=4, capacity=32,
+                     controller=ctrl, block_size=4, n_blocks=10)
+        for i in range(3):
+            eng.submit(Request(f"r{i}", list(range(4 + 8 * i, 12 + 8 * i)),
+                               max_new=16))
+        eng.run()
+        assert "fp8" in ctrl.history, \
+            "MLA latent-block headroom never engaged FP8"
+
+
+class TestHybridPagedServing:
+    """zamba2-class hybrid descriptor: paged shared-attention blocks +
+    slot-resident SSM state, scheduled through the same paged path."""
+
+    def test_descriptor_shape(self, tiny_hybrid):
+        cfg, sparams = tiny_hybrid
+        desc = M.cache_descriptor(cfg)
+        assert desc.kind == "hybrid" and not desc.prefix_cacheable
+        assert {p.name for p in desc.planes} == {"k", "v"}
+        assert {p.name for p in desc.slot_planes} == \
+            {"conv_x", "conv_bc", "ssm"}
+        assert desc.bytes_per_token > 0 and desc.bytes_per_slot > 0
+        # shared-attn planes page one logical layer per application group
+        assert desc.planes[0].n_layers == cfg.n_layers // cfg.attn_every
+
+    @pytest.mark.slow
+    def test_batched_matches_solo(self, tiny_hybrid):
+        """Batched hybrid serving == solo serving per request (state
+        rows are independent; inactive-row masking must hold)."""
+        cfg, sparams = tiny_hybrid
+        prompts = [list(range(4 + 10 * i, 13 + 10 * i)) for i in range(3)]
+
+        def solo(p):
+            eng = Engine(cfg, sparams, n_slots=3, capacity=32,
+                         forced_mode="fp16", chunk_tokens=512)
+            eng.submit(Request("s", p, max_new=6))
+            return eng.run()[0].output
+
+        eng = Engine(cfg, sparams, n_slots=3, capacity=32,
+                     forced_mode="fp16", chunk_tokens=512)
+        for i, p in enumerate(prompts):
+            eng.submit(Request(f"r{i}", p, max_new=6))
+        fin = {r.request_id: r.output for r in eng.run()}
+        for i, p in enumerate(prompts):
+            assert fin[f"r{i}"] == solo(p), f"r{i} corrupted by batching"
+
+    @pytest.mark.slow
+    def test_decode_interleaves_with_chunked_prefill(self, tiny_hybrid):
+        """SSM-state rows mid-prefill must not corrupt active decodes
+        (and vice versa): r0 keeps decoding while r1's long prompt
+        prefills in small exact-length chunks, and r0's output equals
+        its solo run."""
+        cfg, sparams = tiny_hybrid
+
+        def solo(p, max_new):
+            eng = Engine(cfg, sparams, n_slots=4, capacity=128,
+                         forced_mode="fp16", chunk_tokens=512)
+            eng.submit(Request("s", p, max_new=max_new))
+            return eng.run()[0].output
+
+        eng = Engine(cfg, sparams, n_slots=4, capacity=128,
+                     forced_mode="fp16", chunk_tokens=8)
+        p0 = list(range(4, 12))
+        eng.submit(Request("r0", p0, max_new=12))
+        eng.step()                                  # r0 prefilled + admitted
+        eng.submit(Request("r1", list(range(2, 66)), max_new=2))
+        fin = {r.request_id: r for r in eng.run()}
+        assert len(fin["r0"].output) == 12 and len(fin["r1"].output) == 2
+        assert fin["r0"].output == solo(p0, 12), \
+            "prefill chunks of r1 corrupted r0's slot state"
+
+    @pytest.mark.slow
+    def test_preemption_completes_all_requests(self, tiny_hybrid):
+        """Scarce shared-attn pool forces preemption; every request
+        still completes with its full token budget and slot state is
+        released (SSD chunk-boundary rounding makes token-level
+        bit-exactness a non-goal here, unlike attention families)."""
+        cfg, sparams = tiny_hybrid
+        eng = Engine(cfg, sparams, n_slots=3, capacity=32,
+                     forced_mode="fp16", block_size=4, n_blocks=10)
+        for i in range(3):
+            eng.submit(Request(f"r{i}", list(range(4 + 9 * i, 12 + 9 * i)),
+                               max_new=16))
+        fin = {r.request_id: r for r in eng.run()}
+        assert eng.stats["preemptions"] >= 1, "scarce pool never preempted"
+        assert len(fin) == 3
+        assert all(len(r.output) == 16 for r in fin.values())
+        eng.blocks.check_invariants()
+        assert eng.blocks.blocks_in_use() == 0
+        assert eng.slot_state.n_free() == eng.slot_state.n_slots
+
+    def test_slot_state_claimed_in_lockstep(self, tiny_hybrid):
+        """The SlotManager side of the hybrid descriptor mirrors the
+        BlockManager's slot assignment while sequences are live."""
+        cfg, sparams = tiny_hybrid
+        eng = Engine(cfg, sparams, n_slots=3, capacity=32,
+                     forced_mode="fp16")
+        assert eng.slot_state is not None
+        assert not eng.blocks.prefix_cache, \
+            "recurrent state cannot be prefix-cached"
+        for i in range(2):
+            eng.submit(Request(f"r{i}", list(range(4, 12)), max_new=8))
+        eng.step()
+        live = {i for i, s in enumerate(eng.blocks.seqs) if s is not None}
+        assert set(eng.slot_state.active()) == live
+        for i in live:
+            assert eng.slot_state.slots[i].request_id \
+                == eng.blocks.seqs[i].request_id
+        eng.run()
+        assert eng.slot_state.n_free() == eng.slot_state.n_slots
+
+    @pytest.mark.slow
+    def test_free_block_frac_sees_hybrid_pressure(self, tiny_hybrid):
+        """Shared-attention block exhaustion on a hybrid model must
+        engage the controller's FP8 memory-pressure trigger."""
+        cfg, sparams = tiny_hybrid
+        ctrl = DualPrecisionController(
+            SLOConfig(tpot_ms=1e9, hysteresis_steps=2,
+                      free_block_frac_min=0.3),
+            fp16_ms_per_token=1e-9, fp8_ms_per_token=1e-9)
+        eng = Engine(cfg, sparams, n_slots=4, capacity=32,
+                     controller=ctrl, block_size=4, n_blocks=10)
+        for i in range(3):
+            eng.submit(Request(f"r{i}", list(range(4 + 8 * i, 12 + 8 * i)),
+                               max_new=16))
+        eng.run()
+        assert "fp8" in ctrl.history, \
+            "hybrid shared-attn headroom never engaged FP8"
+
+
+class TestSSMPagedScheduling:
+    """Pure-SSM descriptor: slot-resident state only; block tables
+    degenerate to token accounting but scheduling is the same path."""
+
+    def test_engine_serves_mamba2(self):
+        cfg = ARCHS["mamba2-2.7b"].reduced()
+        sparams = to_serving(M.init_params(jax.random.PRNGKey(0), cfg))
+        desc = M.cache_descriptor(cfg)
+        assert desc.kind == "ssm" and not desc.planes
+        assert desc.bytes_per_token == 0 and desc.bytes_per_slot > 0
+        eng = Engine(cfg, sparams, n_slots=2, capacity=32,
+                     forced_mode="fp16", chunk_tokens=512)
+        for i in range(3):                           # recycles slots
+            eng.submit(Request(f"r{i}", list(range(4 + 7 * i, 12 + 7 * i)),
+                               max_new=4))
+        fin = eng.run()
+        assert len(fin) == 3
+        assert all(len(r.output) == 4 for r in fin)

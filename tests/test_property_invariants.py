@@ -120,22 +120,47 @@ class TestTraceInvariants:
         assert times == sorted(times)
 
 
+def _descriptor(kind: str):
+    """Real per-family cache descriptors (kvcache.py CacheDescriptor)
+    derived from assigned archs: gqa (qwen), mla (deepseek-v3 latents),
+    hybrid (zamba2 shared-attn + slot-resident SSM state)."""
+    from repro.configs import ARCHS
+    from repro.models.model import cache_descriptor
+
+    arch = {"gqa": "qwen1.5-0.5b", "mla": "deepseek-v3-671b",
+            "hybrid": "zamba2-2.7b"}[kind]
+    desc = cache_descriptor(ARCHS[arch].reduced())
+    assert desc.kind == kind
+    return desc
+
+
 class TestBlockManagerCOWInvariants:
     """Hypothesis-driven op soup over the refcounted prefix-caching
-    BlockManager: refcounts never negative, zero-ref blocks live on
-    exactly one of {free list, LRU cache}, shared blocks never on
-    either, the hash index stays bijective, and the incremental table
-    array never goes stale (check_invariants audits all of it)."""
+    BlockManager, parametrized over the per-family cache DESCRIPTORS
+    (GQA K/V planes, MLA latent planes, hybrid shared-attn planes +
+    slot-resident SSM state): refcounts never negative, zero-ref blocks
+    live on exactly one of {free list, LRU cache}, shared blocks never
+    on either, COW forks are atomic, the hash index stays bijective,
+    and the incremental table array never goes stale (check_invariants
+    audits all of it). Recurrent descriptors run with the prefix cache
+    off — exactly as the engine instantiates them."""
 
+    @pytest.mark.parametrize("kind", ["gqa", "mla", "hybrid"])
     @settings(max_examples=40, deadline=None)
-    @given(st.integers(0, 2**31 - 1),
-           st.lists(st.integers(0, 4), min_size=10, max_size=120))
-    def test_op_soup(self, seed, ops):
-        from repro.serving.kvcache import BlockManager
+    @given(seed=st.integers(0, 2**31 - 1),
+           ops=st.lists(st.integers(0, 4), min_size=10, max_size=120))
+    def test_op_soup(self, kind, seed, ops):
+        from repro.serving.kvcache import BlockManager, SlotManager
 
+        desc = _descriptor(kind)
+        assert (desc.bytes_per_token > 0) == bool(desc.planes)
+        assert (desc.bytes_per_slot > 0) == bool(desc.slot_planes)
         rng = np.random.RandomState(seed % (2**31))
         bm = BlockManager(n_slots=3, block_size=4, n_blocks=10,
-                          max_blocks_per_seq=5, prefix_cache=True)
+                          max_blocks_per_seq=5,
+                          prefix_cache=desc.prefix_cacheable)
+        # slot-resident state side claimed/released in lockstep
+        sm = SlotManager(3, 20) if desc.slot_planes else None
         streams = [list(range(s, s + 16)) for s in (0, 0, 32)]
         live: list[int] = []
         for op in ops:
@@ -144,7 +169,11 @@ class TestBlockManagerCOWInvariants:
                 idx = bm.try_allocate(f"r{rng.randint(1 << 30)}", len(toks),
                                       4, bm.prefix_admit_discount(toks))
                 if idx is not None:
-                    bm.attach_prefix(idx, toks)
+                    matched = bm.attach_prefix(idx, toks)
+                    assert desc.prefix_cacheable or matched == 0, \
+                        "recurrent descriptor shared a prefix"
+                    if sm is not None:
+                        sm.claim(idx, f"r{idx}", len(toks), 4)
                     live.append(idx)
             elif op == 1 and live:
                 idx = live[rng.randint(len(live))]
@@ -156,11 +185,18 @@ class TestBlockManagerCOWInvariants:
             elif op == 2 and live:
                 idx = live.pop(rng.randint(len(live)))
                 bm.release(idx)
+                if sm is not None:
+                    sm.release(idx)
             elif op == 3:
                 bm.lookup_prefix(streams[rng.randint(len(streams))])
             bm.check_invariants()
+            if sm is not None:
+                assert set(sm.active()) == set(live), \
+                    "slot-state side fell out of lockstep"
         for idx in live:
             bm.release(idx)
+            if sm is not None:
+                sm.release(idx)
         bm.check_invariants()
         assert bm.blocks_in_use() == 0
         assert bm.n_free_blocks() == bm.n_blocks

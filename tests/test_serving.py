@@ -39,6 +39,7 @@ def _greedy_reference(cfg, sparams, prompt, n_new, mode="fp16"):
     return out
 
 
+@pytest.mark.slow
 class TestEngine:
     def test_single_request_matches_unbatched_reference(self, tiny):
         cfg, sparams = tiny
@@ -202,6 +203,7 @@ class TestSimulation:
         assert st["max_rate"] > 2 * st["mean_rate"] * 0.8  # bursty
 
 
+@pytest.mark.slow
 class TestPlanarEngine:
     def test_planar_engine_matches_plain_fp16(self, tiny):
         """NestedKV engine output == plain-cache engine output at fp16."""

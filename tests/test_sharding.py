@@ -13,6 +13,9 @@ import jax.numpy as jnp
 import pytest
 from jax.sharding import PartitionSpec as P
 
+# small-mesh subprocess integration + resolver sweep — slow lane
+pytestmark = pytest.mark.slow
+
 from repro.configs import ARCHS, INPUT_SHAPES
 from repro.launch import steps
 from repro.roofline import analysis as roof

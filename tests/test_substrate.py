@@ -7,6 +7,9 @@ import jax
 import jax.numpy as jnp
 import pytest
 
+# optimizer/pipeline/checkpoint/training-loop integration — slow lane
+pytestmark = pytest.mark.slow
+
 from repro.checkpoint import io as ckpt_io
 from repro.configs import ARCHS
 from repro.data.pipeline import DataConfig, SyntheticLM, microbatch_split
