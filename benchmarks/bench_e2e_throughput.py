@@ -48,19 +48,28 @@ def modeled() -> list[dict]:
 
 MEASURED_FAMILIES = {
     # descriptor families through the ONE paged scheduling path:
-    # GQA K/V blocks and MLA latent (c_kv + k_rope) blocks
+    # GQA K/V blocks, MLA latent (c_kv + k_rope) blocks, and gemma3
+    # sliding-window GQA (per-layer-group tables with window-slide
+    # reclamation of local-layer blocks)
     "gqa": "qwen1.5-0.5b",
     "mla": "deepseek-v3-671b",
+    "swa": "gemma3-1b",
 }
 
+# prompts >= 4x the reduced gemma3 window (19) so steady-state decode
+# actually slides local blocks back to the pool
+_PROMPT_LEN = {"swa": 96}
 
-def measured(n_requests: int = 8, families=("gqa", "mla")) -> list[dict]:
+
+def measured(n_requests: int = 8,
+             families=("gqa", "mla", "swa")) -> list[dict]:
     """Paged engine end-to-end in both forced modes, per cache family.
     The scarce-pool run (n_blocks below dense-equivalent) exercises
     decode-growth preemption — the memory-pressure regime the FP16↔FP8
     switch exists for. The MLA rows track the latent-cache serving
     trajectory (block utilization, preemptions, prefix hit-rate over
-    latent blocks)."""
+    latent blocks); the swa (gemma3) rows track sliding-window
+    reclamation (blocks returned to the pool mid-generation)."""
     from repro.configs import ARCHS
     from repro.models import model as M
     from repro.models.convert import to_serving
@@ -71,6 +80,7 @@ def measured(n_requests: int = 8, families=("gqa", "mla")) -> list[dict]:
         cfg = ARCHS[MEASURED_FAMILIES[fam]].reduced()
         params = M.init_params(jax.random.PRNGKey(0), cfg)
         sparams = to_serving(params)
+        plen = _PROMPT_LEN.get(fam, 16)
         for mode in ("fp16", "fp8"):
             for n_blocks, tag in ((None, ""), (12, "_scarce")):
                 rng = np.random.RandomState(0)
@@ -79,7 +89,7 @@ def measured(n_requests: int = 8, families=("gqa", "mla")) -> list[dict]:
                              n_blocks=n_blocks)
                 for i in range(n_requests):
                     eng.submit(Request(f"r{i}",
-                                       list(rng.randint(1, 400, 16)),
+                                       list(rng.randint(1, 400, plen)),
                                        max_new=8))
                 t0 = time.perf_counter()
                 fin = eng.run()
@@ -95,7 +105,9 @@ def measured(n_requests: int = 8, families=("gqa", "mla")) -> list[dict]:
                              "preemptions": eng.stats["preemptions"],
                              "prefill_chunks": eng.stats["chunks"],
                              "prefix_hit_rate": round(ps["hit_rate"], 3),
-                             "blocks_saved": ps["blocks_saved"]})
+                             "blocks_saved": ps["blocks_saved"],
+                             "window_reclaimed": eng.stats[
+                                 "window_reclaimed_blocks"]})
     return rows
 
 

@@ -155,7 +155,12 @@ class ArchConfig:
             moe=small_moe, mla=small_mla, ssm=small_ssm,
             attn_every=min(self.attn_every, 2) if self.attn_every else 0,
             swa_pattern=min(self.swa_pattern, 2) if self.swa_pattern else 0,
-            sliding_window=64 if self.sliding_window else None,
+            # derived from the reduced swa_pattern, and deliberately ODD
+            # so the window is never aligned to any KV block size — the
+            # paged tests must exercise windows that end mid-block
+            # (a fixed 64 was always block-aligned and hid those paths)
+            sliding_window=(8 * max(min(self.swa_pattern, 2), 1) + 3)
+            if self.sliding_window else None,
             frontend_dim=min(self.frontend_dim, 128) if self.frontend_dim else 0,
             frontend_len=min(self.frontend_len, 16) if self.frontend_len else 0,
             mtp_heads=self.mtp_heads,

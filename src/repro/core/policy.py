@@ -20,6 +20,13 @@ return to FP16 once headroom recovers. Since every serving family pages
 through one BlockManager (GQA K/V, MLA latent planes, hybrid
 shared-attention blocks — serving/kvcache.py cache descriptors), the
 signal covers deepseek/zamba-class memory pressure, not just GQA.
+
+For sliding-window archs (gemma3's local:global layer groups),
+`free_block_frac` reflects WINDOW-RECLAIMED headroom: local-layer
+blocks that slide out of every future query's window are freed back to
+the pool mid-generation (kvcache.py `slide_window`), so the trigger
+fires on real exhaustion rather than the phantom pressure a
+keep-everything layout would report for dead local-layer KV.
 """
 
 from __future__ import annotations

@@ -30,25 +30,27 @@ def _join(hi, lo):
 
 
 def _kernel_fp16(q_ref, khi_ref, klo_ref, vhi_ref, vlo_ref, lens_ref,
-                 o_ref, m_ref, l_ref, acc_ref, *, n_blocks, block_c):
+                 o_ref, m_ref, l_ref, acc_ref, *, n_blocks, block_c,
+                 window=None):
     _attend(q_ref,
             _join(khi_ref[0, 0], klo_ref[0, 0]),
             _join(vhi_ref[0, 0], vlo_ref[0, 0]),
             lens_ref, o_ref, m_ref, l_ref, acc_ref,
-            n_blocks=n_blocks, block_c=block_c)
+            n_blocks=n_blocks, block_c=block_c, window=window)
 
 
 def _kernel_fp8(q_ref, khi_ref, vhi_ref, lens_ref,
-                o_ref, m_ref, l_ref, acc_ref, *, n_blocks, block_c):
+                o_ref, m_ref, l_ref, acc_ref, *, n_blocks, block_c,
+                window=None):
     k = jax.lax.bitcast_convert_type(khi_ref[0, 0], jnp.float8_e5m2)
     v = jax.lax.bitcast_convert_type(vhi_ref[0, 0], jnp.float8_e5m2)
     _attend(q_ref, k.astype(jnp.float16), v.astype(jnp.float16),
             lens_ref, o_ref, m_ref, l_ref, acc_ref,
-            n_blocks=n_blocks, block_c=block_c)
+            n_blocks=n_blocks, block_c=block_c, window=window)
 
 
 def _attend(q_ref, k, v, lens_ref, o_ref, m_ref, l_ref, acc_ref, *,
-            n_blocks, block_c):
+            n_blocks, block_c, window=None):
     b = pl.program_id(0)
     ci = pl.program_id(2)
 
@@ -66,6 +68,11 @@ def _attend(q_ref, k, v, lens_ref, o_ref, m_ref, l_ref, acc_ref, *,
     kpos = ci * block_c + jax.lax.broadcasted_iota(
         jnp.int32, s.shape, dimension=1)
     s = jnp.where(kpos < lens_ref[b], s, NEG_INF)
+    if window is not None:
+        # sliding-window (gemma3 local-layer) mask: the single query sits
+        # at position len-1, so only keys with kpos > len-1-window attend
+        # (same predicate as layers._apply_window)
+        s = jnp.where(kpos > lens_ref[b] - 1 - window, s, NEG_INF)
 
     m_prev = m_ref[...]                               # (G, 1)
     m_new = jnp.maximum(m_prev, s.max(axis=-1, keepdims=True))
@@ -85,24 +92,26 @@ def _attend(q_ref, k, v, lens_ref, o_ref, m_ref, l_ref, acc_ref, *,
 
 def _paged_kernel_fp16(tables_ref, lens_ref, q_ref, khi_ref, klo_ref,
                        vhi_ref, vlo_ref, o_ref, m_ref, l_ref, acc_ref, *,
-                       n_blocks, block_c):
+                       n_blocks, block_c, window=None):
     del tables_ref      # consumed by the index maps
     _kernel_fp16(q_ref, khi_ref, klo_ref, vhi_ref, vlo_ref, lens_ref,
                  o_ref, m_ref, l_ref, acc_ref,
-                 n_blocks=n_blocks, block_c=block_c)
+                 n_blocks=n_blocks, block_c=block_c, window=window)
 
 
 def _paged_kernel_fp8(tables_ref, lens_ref, q_ref, khi_ref, vhi_ref,
-                      o_ref, m_ref, l_ref, acc_ref, *, n_blocks, block_c):
+                      o_ref, m_ref, l_ref, acc_ref, *, n_blocks, block_c,
+                      window=None):
     del tables_ref
     _kernel_fp8(q_ref, khi_ref, vhi_ref, lens_ref,
                 o_ref, m_ref, l_ref, acc_ref,
-                n_blocks=n_blocks, block_c=block_c)
+                n_blocks=n_blocks, block_c=block_c, window=window)
 
 
-@functools.partial(jax.jit, static_argnames=("fp8", "interpret"))
+@functools.partial(jax.jit, static_argnames=("fp8", "window", "interpret"))
 def paged_planar_decode_attention(q, k_hi, k_lo, v_hi, v_lo, tables, lens, *,
                                   fp8: bool = False,
+                                  window: int | None = None,
                                   interpret: bool = False) -> jax.Array:
     """Block-paged variant: q: (B, H, D); planes: (NB, BS, Hkv, D) uint8
     physical pools (BS = KV block size, one grid step per block); tables:
@@ -113,7 +122,14 @@ def paged_planar_decode_attention(q, k_hi, k_lo, v_hi, v_lo, tables, lens, *,
     (PrefetchScalarGridSpec) so each grid step's index_map DMAs the
     RIGHT physical block — the kernel body is the same online-softmax
     `_attend` as the dense-slot kernel, masking on logical positions.
-    In fp8 mode only the hi planes are touched (half the HBM traffic)."""
+    In fp8 mode only the hi planes are touched (half the HBM traffic).
+
+    window (static): sliding-window size for gemma3-style LOCAL layers —
+    keys at kpos <= len-1-window are masked exactly like the reference
+    `_causal_window_mask`, so slide-freed table holes (pointing at the
+    trash block) can never contribute. On real tables the engine only
+    keeps the last ceil(window/BS)+1 blocks resident, so the masked-out
+    grid steps DMA the one trash block instead of dead cache."""
     bsz, h, d = q.shape
     bs_tok, hkv = k_hi.shape[1], k_hi.shape[2]
     mb = tables.shape[1]
@@ -134,12 +150,12 @@ def paged_planar_decode_attention(q, k_hi, k_lo, v_hi, v_lo, tables, lens, *,
 
     if fp8:
         kernel = functools.partial(_paged_kernel_fp8, n_blocks=mb,
-                                   block_c=bs_tok)
+                                   block_c=bs_tok, window=window)
         ins = [planes[0], planes[2]]
         in_specs = [q_spec, c_spec, c_spec]
     else:
         kernel = functools.partial(_paged_kernel_fp16, n_blocks=mb,
-                                   block_c=bs_tok)
+                                   block_c=bs_tok, window=window)
         ins = planes
         in_specs = [q_spec, c_spec, c_spec, c_spec, c_spec]
     grid_spec = pltpu.PrefetchScalarGridSpec(
@@ -155,15 +171,17 @@ def paged_planar_decode_attention(q, k_hi, k_lo, v_hi, v_lo, tables, lens, *,
 
 
 @functools.partial(jax.jit,
-                   static_argnames=("fp8", "block_c", "interpret"))
+                   static_argnames=("fp8", "block_c", "window", "interpret"))
 def planar_decode_attention(q, k_hi, k_lo, v_hi, v_lo, lens, *,
                             fp8: bool = False,
                             block_c: int = DEFAULT_BLOCK_C,
+                            window: int | None = None,
                             interpret: bool = False) -> jax.Array:
     """q: (B, H, D) f16/f32; planes: (B, Cap, Hkv, D) uint8; lens: (B,).
 
     Returns (B, H, D) f32. Cap must divide block_c (ops-level padding).
-    In fp8 mode only the hi planes are touched."""
+    In fp8 mode only the hi planes are touched. `window` (static) masks
+    keys outside the query's sliding window (gemma3 local layers)."""
     bsz, h, d = q.shape
     cap, hkv = k_hi.shape[1], k_hi.shape[2]
     g = h // hkv
@@ -185,7 +203,7 @@ def planar_decode_attention(q, k_hi, k_lo, v_hi, v_lo, lens, *,
     if fp8:
         out = pl.pallas_call(
             functools.partial(_kernel_fp8, n_blocks=n_blocks,
-                              block_c=block_c),
+                              block_c=block_c, window=window),
             grid=(bsz, hkv, n_blocks),
             in_specs=[q_spec, c_spec, c_spec,
                       pl.BlockSpec(memory_space=pltpu.SMEM)],
@@ -195,7 +213,7 @@ def planar_decode_attention(q, k_hi, k_lo, v_hi, v_lo, lens, *,
     else:
         out = pl.pallas_call(
             functools.partial(_kernel_fp16, n_blocks=n_blocks,
-                              block_c=block_c),
+                              block_c=block_c, window=window),
             grid=(bsz, hkv, n_blocks),
             in_specs=[q_spec, c_spec, c_spec, c_spec, c_spec,
                       pl.BlockSpec(memory_space=pltpu.SMEM)],

@@ -83,6 +83,7 @@ def main() -> int:
         "fp16_fraction": modes.count("fp16") / max(len(modes), 1),
         "prefix_hit_rate": round(ps["hit_rate"], 3),
         "blocks_saved": ps["blocks_saved"],
+        "window_reclaimed_blocks": eng.stats["window_reclaimed_blocks"],
     }))
     return 0 if len(fin) == args.requests else 1
 

@@ -334,7 +334,13 @@ def attention(rt: Runtime, p: dict, cfg, x: jax.Array, *,
     The chunk's k/v are scattered at phys_write (pad/inactive columns
     point at the trash block), then keys are gathered back in logical
     order via phys_read — so chunked and monolithic prefill see
-    bit-identical key tensors.
+    bit-identical key tensors. Under sliding-window layer groups
+    (gemma3) the caller resolves these PER LAYER from the layer's
+    window group's block table (model.run_decoder_stack), so a local
+    layer's gather only touches its window's resident blocks —
+    slide-freed logical positions read trash-block garbage that the
+    `window` mask (already excluding kpos <= qpos - window) provably
+    never lets into the softmax.
     """
     b = x.shape[0]
     q, k, v = _qkv(rt, p, cfg, x, positions)

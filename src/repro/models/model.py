@@ -188,13 +188,23 @@ def cache_descriptor(cfg: ArchConfig, planar: bool = False) -> "KV.CacheDescript
             KV.PlaneSpec("k_rope", cfg.n_layers, (m.qk_rope_dim,), cd)))
     if kind == "gqa":
         hkv, hd = cfg.n_kv_heads, cfg.resolved_head_dim
+        # gemma3-style local:global layer split — per-layer-group window
+        # metadata so the BlockManager can slide-free local-layer blocks
+        # while global-layer blocks stay pinned (kvcache.py LayerGroup)
+        groups: tuple[KV.LayerGroup, ...] = ()
+        if cfg.sliding_window and cfg.swa_pattern:
+            p = cfg.swa_pattern
+            glob = tuple(i for i in range(cfg.n_layers) if i % p == p - 1)
+            loc = tuple(i for i in range(cfg.n_layers) if i % p != p - 1)
+            groups = (KV.LayerGroup("global", None, glob),
+                      KV.LayerGroup("local", int(cfg.sliding_window), loc))
         if planar:
             return KV.CacheDescriptor("gqa", planes=tuple(
                 KV.PlaneSpec(n, cfg.n_layers, (hkv, hd), "uint8")
-                for n in ("k_hi", "k_lo", "v_hi", "v_lo")))
+                for n in ("k_hi", "k_lo", "v_hi", "v_lo")), groups=groups)
         return KV.CacheDescriptor("gqa", planes=(
             KV.PlaneSpec("k", cfg.n_layers, (hkv, hd), cd),
-            KV.PlaneSpec("v", cfg.n_layers, (hkv, hd), cd)))
+            KV.PlaneSpec("v", cfg.n_layers, (hkv, hd), cd)), groups=groups)
     if planar:
         raise ValueError("byte-planar NestedKV applies to GQA K/V planes "
                          "only, not SSM/hybrid state")
@@ -430,21 +440,32 @@ def _run_hybrid_grouped(rt, stacked, cfg, x, *, phase, positions,
 
 def run_decoder_stack(rt, stacked, cfg, x, *, phase, positions, kv_len=None,
                       caches=None, memory=None, cross_caches=None,
-                      causal=True, paged=None):
-    """Scan the main decoder stack. caches/cross_caches are stacked (L, ...)."""
+                      causal=True, paged=None, paged_groups=None):
+    """Scan the main decoder stack. caches/cross_caches are stacked (L, ...).
+
+    paged_groups: (L,) layer -> window-group map. When given, `paged`
+    carries PER-GROUP physical index arrays (phys_write (G, B, C),
+    phys_read (G, B, Cap)) and each scanned layer gathers/scatters
+    through its own group's block table — the mechanism that lets
+    gemma3 local layers read only their sliding window's blocks while
+    global layers read the full table."""
     windows = window_schedule(cfg)
     n_layers = jax.tree_util.tree_leaves(stacked)[0].shape[0]
 
     def body(carry, xs):
         h, aux_acc = carry
         p = xs["p"]
+        pg = paged
+        if paged is not None and "g" in xs:
+            gi = xs["g"]
+            pg = (paged[0][gi], paged[1][gi], paged[2])
         # (seq_shard_hint tried here too — refuted, §Perf Z3/P1: the flash
         # KV scan needs the full sequence per device.)
         h, new_c, new_cross, aux = apply_decoder_block(
             rt, p, cfg, h, phase=phase, positions=positions,
             window=xs.get("w"), cache=xs.get("c"), kv_len=kv_len,
             memory=memory, cross_cache=xs.get("x"), causal=causal,
-            paged=paged)
+            paged=pg)
         ys = {}
         if new_c is not None:
             ys["c"] = new_c
@@ -455,6 +476,8 @@ def run_decoder_stack(rt, stacked, cfg, x, *, phase, positions, kv_len=None,
     xs = {"p": stacked}
     if windows is not None:
         xs["w"] = windows
+    if paged is not None and paged_groups is not None:
+        xs["g"] = jnp.asarray(paged_groups, jnp.int32)
     if caches is not None:
         xs["c"] = caches
     if cross_caches is not None:
@@ -730,8 +753,15 @@ def paged_step(rt, params, cfg, tokens, caches, block_tables, *,
     tokens:       (B, C) int32, right-padded chunks (GQA/MLA only —
                   recurrent state would absorb pads, so ssm/hybrid
                   chunks are exact-length).
-    block_tables: (B, MB) int32 physical block ids in logical order
-                  (holes = trash block 0).
+    block_tables: (B, MB) or (G, B, MB) int32 physical block ids in
+                  logical order (holes = trash block 0). G is the
+                  descriptor's window-group count (gemma3: group 0
+                  global, group 1 local) — each layer scatters/gathers
+                  through ITS group's table, so slide-freed local
+                  blocks read as trash (masked by the window) while
+                  global layers see the full history. A (B, MB) table
+                  is broadcast to every group (the no-reclamation
+                  layout: all groups share one physical block set).
     q_offset:     (B,) absolute position of tokens[:, 0].
     kv_len:       (B,) valid cache tokens AFTER this chunk is written,
                   i.e. q_offset + real_chunk_len (0 disables a row:
@@ -762,27 +792,42 @@ def paged_step(rt, params, cfg, tokens, caches, block_tables, *,
     if fam == "encdec":
         raise ValueError("paged_step serves decoder-only archs")
     b, c = tokens.shape
+    desc = cache_descriptor(cfg)
+    ngrp = len(desc.group_windows)
     tables = jnp.asarray(block_tables, jnp.int32)
+    if tables.ndim == 2:
+        tables = tables[None]
+    if tables.shape[0] != ngrp:            # shared table for every group
+        tables = jnp.broadcast_to(tables, (ngrp,) + tables.shape[1:])
     q_offset = jnp.asarray(q_offset, jnp.int32)
     kv_len = jnp.asarray(kv_len, jnp.int32)
-    mb = tables.shape[1]
+    mb = tables.shape[2]
     positions = q_offset[:, None] + jnp.arange(c, dtype=jnp.int32)[None, :]
     real = positions < kv_len[:, None]
-    blk = jnp.take_along_axis(
-        tables, jnp.clip(positions // block_size, 0, mb - 1), axis=1)
-    trash = jnp.arange(c, dtype=jnp.int32)[None, :] % block_size
-    phys_write = jnp.where(real, blk * block_size + positions % block_size,
+    blkidx = jnp.clip(positions // block_size, 0, mb - 1)
+    blk = jnp.take_along_axis(                              # (G, B, C)
+        tables, jnp.broadcast_to(blkidx, (ngrp,) + blkidx.shape), axis=2)
+    trash = jnp.arange(c, dtype=jnp.int32)[None, None, :] % block_size
+    phys_write = jnp.where(real[None],
+                           blk * block_size + (positions % block_size)[None],
                            trash)
     offs = jnp.arange(block_size, dtype=jnp.int32)
-    phys_read = (tables[:, :, None] * block_size
-                 + offs[None, None, :]).reshape(b, mb * block_size)
+    phys_read = (tables[..., None] * block_size
+                 + offs[None, None, None, :]).reshape(ngrp, b,
+                                                      mb * block_size)
 
     h = embed_tokens(rt, params, cfg, tokens)
     if fam in ("dense", "moe", "vlm"):
+        if ngrp == 1:
+            paged = (phys_write[0], phys_read[0], q_offset)
+            gmap = None
+        else:
+            paged = (phys_write, phys_read, q_offset)
+            gmap = desc.layer_group_map(cfg.n_layers)
         h, new_attn, _, aux = run_decoder_stack(
             rt, params["layers"], cfg, h, phase="paged", positions=positions,
-            kv_len=kv_len, caches=caches["attn"],
-            paged=(phys_write, phys_read, q_offset))
+            kv_len=kv_len, caches=caches["attn"], paged=paged,
+            paged_groups=gmap)
         new_caches = {"attn": new_attn}
     else:                                            # ssm / hybrid
         ssm_in = caches["ssm"]
@@ -795,7 +840,7 @@ def paged_step(rt, params, cfg, tokens, caches, block_tables, *,
             positions=positions, kv_len=kv_len, caches=ssm_in,
             shared_params=params.get("shared_attn"),
             shared_caches=caches.get("shared"),
-            paged=(phys_write, phys_read, q_offset))
+            paged=(phys_write[0], phys_read[0], q_offset))
         if slot is not None:
             new_ssm = jax.tree.map(
                 lambda full, one: jax.lax.dynamic_update_slice_in_dim(

@@ -31,6 +31,19 @@ tokens would be absorbed into the state) and disable prefix caching (a
 cached KV prefix cannot stand in for slot-resident SSM state); batched
 decode masks state writes on inactive rows.
 
+Sliding-window archs (gemma3's 5:1 local:global layout) serve with one
+block table PER WINDOW GROUP: local-layer blocks that slide fully out
+of every future query's window are freed back to the pool mid-
+generation (`BlockManager.slide_window`, invoked on every ensure) while
+global-layer blocks stay pinned, so `free_block_frac` — and with it the
+controller's memory-pressure FP8 trigger and the admission watermark —
+reflects HONEST headroom instead of phantom pressure from dead
+local-layer KV. Prefix matching is group-aware: global groups match the
+full from-root chain, local groups only need (and only attach) the
+blocks covering the resume position's lookback window.
+`window_reclaim=False` keeps the group split but never slides — the
+every-block-resident baseline the tests compare against.
+
 Copy-on-write prefix caching (gqa/mla, on by default): at admission
 the engine matches the longest cached full-block prefix of the request's
 token stream (kvcache.py chain-hash index), attaches those blocks with
@@ -109,7 +122,7 @@ class Engine:
                  clock: Callable[[], float] = time.monotonic,
                  block_size: int = 16,
                  n_blocks: int | None = None, chunk_tokens: int = 256,
-                 prefix_cache: bool = True):
+                 prefix_cache: bool = True, window_reclaim: bool = True):
         self.cfg = cfg
         self.params = serving_params
         self.controller = controller
@@ -134,16 +147,28 @@ class Engine:
         self.finished: list[Request] = []
         self.lens = np.zeros(n_slots, np.int32)
         self.stats = {"preemptions": 0, "chunks": 0, "chunk_tokens": 0,
-                      "peak_block_util": 0.0}
+                      "peak_block_util": 0.0, "window_reclaimed_blocks": 0}
         self._last_step_ms: float | None = None
         self._rts = {m: Runtime(mode=m, backend=backend, dtype=jnp.float32)
                      for m in ("fp16", "fp8")}
         self.block_size = block_size
         mbs = -(-capacity // block_size)
+        # per-layer-group window metadata: sliding-window archs (gemma3)
+        # keep one block table per group — each group allocates from its
+        # own id space over the same pool array (a layer only touches
+        # its group's rows of a block), so local-layer blocks can be
+        # slide-freed mid-generation while global-layer blocks stay
+        # pinned, at zero extra pool bytes; window_reclaim=False keeps
+        # the group split but never slides (the
+        # every-block-resident-forever baseline)
+        gw = self.desc.group_windows
+        if not window_reclaim:
+            gw = (None,) * len(gw)
         if n_blocks is None:
             n_blocks = n_slots * mbs         # dense-equivalent pool by default
         self.blocks = BlockManager(n_slots, block_size, n_blocks, mbs,
-                                   prefix_cache=prefix_cache)
+                                   prefix_cache=prefix_cache,
+                                   group_windows=gw)
         # slot-resident state side (hybrid/ssm descriptors): SlotManager
         # tracks per-slot occupancy in lockstep with the block tables
         self.slot_state = SlotManager(n_slots, capacity) \
@@ -151,17 +176,31 @@ class Engine:
         self.caches = M.init_paged_cache(
             cfg, self.blocks.n_total_blocks, block_size, n_slots=n_slots,
             planar=self.kv_planar)
-        # one compile: src/dst are traced scalars into the block axis;
-        # donating the cache lets XLA update the one block in place
-        # instead of materializing a whole-pool copy per COW fork.
-        # Only paged-plane subtrees are touched — slot-resident state
-        # ("ssm") has a slot axis, not a block axis.
-        self._copy_block = jax.jit(
-            lambda c, s, d: {
-                k: (jax.tree.map(lambda a: a.at[:, d].set(a[:, s]), sub)
-                    if k in ("attn", "shared") else sub)
-                for k, sub in c.items()},
-            donate_argnums=(0,))
+        # one compile per window group: src/dst are traced scalars into
+        # the block axis; donating the cache lets XLA update the one
+        # block in place instead of materializing a whole-pool copy per
+        # COW fork. Only paged-plane subtrees are touched —
+        # slot-resident state ("ssm") has a slot axis, not a block
+        # axis. With per-group block id spaces a fork must copy ONLY
+        # the group's layer rows: the same physical id may be live in
+        # the other group with unrelated content.
+        def _make_copy(layers):
+            if layers is None:               # single group: all layers
+                cp = lambda a, s, d: a.at[:, d].set(a[:, s])
+            else:
+                li = jnp.asarray(layers, jnp.int32)
+                cp = lambda a, s, d: a.at[li, d].set(a[li, s])
+            return jax.jit(
+                lambda c, s, d: {
+                    k: (jax.tree.map(lambda a: cp(a, s, d), sub)
+                        if k in ("attn", "shared") else sub)
+                    for k, sub in c.items()},
+                donate_argnums=(0,))
+        if self.desc.groups:
+            self._copy_block = {gi: _make_copy(g.layers)
+                                for gi, g in enumerate(self.desc.groups)}
+        else:
+            self._copy_block = {0: _make_copy(None)}
         if self.slot_state is not None:
             # zero one slot's recurrent state at (re-)admission
             self._zero_slot = jax.jit(
@@ -243,11 +282,11 @@ class Engine:
     # paged path: chunked prefill + block-table decode
     # =========================================================================
     def _ensure_take(self, idx: int, start: int, want: int) -> int:
-        """Largest chunk <= want coverable by already-owned + free blocks."""
+        """Largest chunk <= want coverable by already-owned + free blocks
+        across every window group (sliding dead local blocks back into
+        the pool first)."""
         bm = self.blocks
-        avail = (len(bm.seqs[idx].blocks) + bm.n_free_blocks()) \
-            * bm.block_size - start
-        take = min(want, avail)
+        take = bm.max_coverable(idx, start, want)
         if take <= 0 or not bm.ensure(idx, start + take):
             return 0
         return take
@@ -324,11 +363,12 @@ class Engine:
             self._chunk_cache[key] = jax.jit(fn)
         return self._chunk_cache[key]
 
-    def _apply_cow(self, pairs: list[tuple[int, int]]) -> None:
-        """Materialize COW forks: copy each forked block's bytes in the
-        physical pool (single jitted scatter, src/dst traced)."""
-        for src, dst in pairs:
-            self.caches = self._copy_block(
+    def _apply_cow(self, triples: list[tuple[int, int, int]]) -> None:
+        """Materialize COW forks: copy each forked block's bytes — the
+        owning group's layer rows only — in the physical pool (one
+        jitted scatter per group, src/dst traced)."""
+        for g, src, dst in triples:
+            self.caches = self._copy_block[g](
                 self.caches, jnp.int32(src), jnp.int32(dst))
 
     def _cow_or_preempt(self, idx: int, start: int, end: int) -> bool:
@@ -351,6 +391,8 @@ class Engine:
     def _sample_peak(self) -> None:
         self.stats["peak_block_util"] = max(
             self.stats["peak_block_util"], self.blocks.utilization())
+        self.stats["window_reclaimed_blocks"] = \
+            self.blocks.window_freed_blocks
 
     def _run_chunk(self, mode: str, idx: int, start: int, take: int) -> None:
         st = self.prefilling[idx]
@@ -363,7 +405,7 @@ class Engine:
         toks[0, :take] = st.seq_tokens[start: start + take]
         logits, self.caches = self._chunk_fn(mode, bucket)(
             self.params, self.caches, jnp.asarray(toks),
-            jnp.asarray(self.blocks.table(idx)[None]),
+            jnp.asarray(self.blocks.group_tables()[:, idx: idx + 1]),
             jnp.asarray([start], np.int32),
             jnp.asarray([start + take], np.int32),
             jnp.asarray([take - 1], np.int32), jnp.int32(idx))
@@ -445,7 +487,7 @@ class Engine:
             kvl[idx] = self.lens[idx] + 1
         logits, self.caches = self._decode[mode](
             self.params, self.caches, jnp.asarray(tokens),
-            jnp.asarray(self.blocks.tables()), jnp.asarray(q_off),
+            jnp.asarray(self.blocks.group_tables()), jnp.asarray(q_off),
             jnp.asarray(kvl))
         nxt = np.asarray(jnp.argmax(logits, -1))
         now = self.clock()

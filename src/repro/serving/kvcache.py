@@ -65,6 +65,36 @@ Block identity is token-based, not byte-based: under the dual-precision
 controller a reused block may have been written in either precision —
 interchangeable by construction in NestedFP's serving model (both modes
 read the same nested buffers). Forced-mode runs are bit-exact.
+
+Sliding-window layer groups (gemma3-style local attention)
+----------------------------------------------------------
+Descriptors whose architecture interleaves LOCAL (sliding-window) and
+GLOBAL attention layers (gemma3's 5:1 pattern) carry `LayerGroup`
+metadata splitting the paged planes' layer axis into window groups.
+`BlockManager` then keeps ONE block table PER GROUP per sequence, and
+each group allocates from its OWN id space over the same physical pool
+array: a layer only ever reads/writes its own group's rows of a block,
+so block id `b` can be live in the global group and the local group
+simultaneously without touching the same bytes — no pool doubling, and
+no permanently-dead other-group rows inside an allocated block. A
+windowed group's blocks are **slide-freed** the moment they fall fully
+out of every future query's window — `slide_window` (invoked on every
+`ensure`) decrefs dead local blocks, returns exclusively-held ones
+straight to the group's free list, and points the table hole back at
+the trash block. Global-group blocks stay pinned for the sequence's
+whole life, so `free_block_frac` (the MINIMUM headroom across groups —
+the binding constraint) reports the HONEST pressure the dual-precision
+controller acts on instead of phantom pressure from dead local-layer
+KV.
+
+Slide-freed blocks are evicted from the prefix index at slide time, so
+they can never be prefix-matched for local groups; blocks a live
+neighbour still shares stay matchable (their content is intact). Prefix
+matching itself is GROUP-AWARE (`_match_plan`): a resumable offset `m`
+requires the global groups' full [0, m) chain AND, per windowed group,
+only the cached blocks covering the resume position's lookback window
+[q0 - window + 1, m*bs) — freshly attached sequences therefore start
+with their local groups already slid to that point.
 """
 
 from __future__ import annotations
@@ -115,16 +145,56 @@ class SlotPlaneSpec:
 
 
 @dataclasses.dataclass(frozen=True)
+class LayerGroup:
+    """One attention-window group of the paged planes' layer axis.
+
+    gemma3-style configs split into a "global" group (window None — keys
+    live for the whole sequence) and a "local" group (sliding window in
+    tokens — keys die once they fall out of every future query's
+    lookback). Each group gets its OWN per-sequence block table in
+    `BlockManager`, which is what makes local blocks reclaimable while
+    global blocks stay pinned."""
+    name: str
+    window: int | None                  # tokens; None = full attention
+    layers: tuple[int, ...]             # indices into the planes' layer axis
+
+
+@dataclasses.dataclass(frozen=True)
 class CacheDescriptor:
     """Per-family cache layout: which planes are paged (BlockManager)
     and which are slot-resident (SlotManager). `prefix_cacheable` is
     False for recurrent families — a cached KV prefix cannot stand in
     for slot-resident SSM state, so sharing blocks would skip state
-    recomputation."""
+    recomputation. `groups` (empty = one implicit global group) carries
+    the per-layer-group window metadata for sliding-window archs."""
     kind: str                           # "gqa" | "mla" | "hybrid" | "ssm"
     planes: tuple[PlaneSpec, ...] = ()
     slot_planes: tuple[SlotPlaneSpec, ...] = ()
     prefix_cacheable: bool = True
+    groups: tuple[LayerGroup, ...] = ()
+
+    @property
+    def group_windows(self) -> tuple[int | None, ...]:
+        """Per-group sliding window (None = global); the BlockManager's
+        `group_windows` argument. Single implicit global group when the
+        descriptor carries no explicit layer groups."""
+        if not self.groups:
+            return (None,)
+        return tuple(g.window for g in self.groups)
+
+    def layer_group_map(self, n_layers: int) -> np.ndarray:
+        """(n_layers,) int32 map from plane layer index to group index
+        (all zeros for the implicit single global group)."""
+        out = np.zeros(n_layers, np.int32)
+        if self.groups:
+            seen: set[int] = set()
+            for gi, g in enumerate(self.groups):
+                for li in g.layers:
+                    assert 0 <= li < n_layers and li not in seen, (gi, li)
+                    seen.add(li)
+                    out[li] = gi
+            assert len(seen) == n_layers, "layer groups must cover the stack"
+        return out
 
     @property
     def paged(self) -> bool:
@@ -207,14 +277,33 @@ _ROOT_HASH = hash(("prefix-root",))
 
 
 @dataclasses.dataclass
+class _Group:
+    """One window group's view of a sequence: physical block ids by
+    logical index (TRASH_BLOCK = slide-freed hole), the chain hashes of
+    the committed/matched full-block prefix, and how many leading
+    logical blocks the window has slid past."""
+    blocks: list[int] = dataclasses.field(default_factory=list)
+    hashes: list[int] = dataclasses.field(default_factory=list)
+    slid: int = 0
+
+
+@dataclasses.dataclass
 class _Seq:
     request_id: str
-    blocks: list[int]          # physical block ids, logical order
+    groups: list[_Group]       # one block table per window group
     length: int = 0            # tokens committed to the cache
     admitted: int = 0          # admission counter (largest == youngest)
-    hashes: list[int] = dataclasses.field(default_factory=list)
-    # chain hashes of the committed full-block prefix (len == number of
-    # full blocks already registered/matched for this sequence)
+
+    # group-0 views: the only group for non-windowed descriptors (and
+    # the GLOBAL group for windowed ones) — keeps single-group callers
+    # and tests reading seq.blocks/seq.hashes working unchanged
+    @property
+    def blocks(self) -> list[int]:
+        return self.groups[0].blocks
+
+    @property
+    def hashes(self) -> list[int]:
+        return self.groups[0].hashes
 
 
 class BlockManager:
@@ -233,27 +322,41 @@ class BlockManager:
     """
 
     def __init__(self, n_slots: int, block_size: int, n_blocks: int,
-                 max_blocks_per_seq: int, prefix_cache: bool = False):
+                 max_blocks_per_seq: int, prefix_cache: bool = False,
+                 group_windows: tuple[int | None, ...] = (None,)):
         assert block_size > 0 and n_blocks > 0
+        assert group_windows and all(w is None or w > 0 for w in group_windows)
         self.n_slots = n_slots
         self.block_size = block_size
         self.n_blocks = n_blocks
         self.max_blocks_per_seq = max_blocks_per_seq
         self.prefix_cache = prefix_cache
-        # pop() hands out low block ids first (deterministic layouts in tests)
-        self._free = list(range(n_blocks, 0, -1))
+        self.group_windows = tuple(group_windows)
+        self.n_groups = len(self.group_windows)
+        # PER-GROUP id spaces over one shared pool array: a layer only
+        # touches its own group's rows of a block, so the same id can be
+        # live in several groups without byte overlap. pop() hands out
+        # low block ids first (deterministic layouts in tests).
+        self._free = [list(range(n_blocks, 0, -1))
+                      for _ in range(self.n_groups)]
         self.seqs: list[_Seq | None] = [None] * n_slots
         self._admissions = 0
-        self._ref = [0] * (n_blocks + 1)             # per-physical refcount
-        self._index: dict[int, int] = {}             # chain hash -> block id
-        self._hash_of: dict[int, int] = {}           # registered block -> hash
-        self._lru: collections.OrderedDict[int, None] = collections.OrderedDict()
-        # unreferenced-but-cached blocks, least recently used first
-        self._tables = np.full((n_slots, max_blocks_per_seq), TRASH_BLOCK,
-                               np.int32)
+        self._ref = [[0] * (n_blocks + 1)            # per-group refcounts
+                     for _ in range(self.n_groups)]
+        self._index: dict[tuple[int, int], int] = {}
+        # (group, chain hash) -> block id; a block's content is only
+        # valid for its group's layers
+        self._hash_of: dict[tuple[int, int], int] = {}
+        # registered (group, block) -> chain hash
+        self._lru: list[collections.OrderedDict[int, None]] = [
+            collections.OrderedDict() for _ in range(self.n_groups)]
+        # per-group unreferenced-but-cached blocks, least recent first
+        self._tables = np.full((self.n_groups, n_slots, max_blocks_per_seq),
+                               TRASH_BLOCK, np.int32)
         self.prefix_stats = {"queries": 0, "lookup_tokens": 0,
                              "hit_tokens": 0, "blocks_shared": 0,
                              "cow_forks": 0, "evictions": 0}
+        self.window_freed_blocks = 0     # blocks returned by window slides
 
     # -- pool-level views ------------------------------------------------------
     @property
@@ -265,112 +368,223 @@ class BlockManager:
         """Max tokens a single sequence can hold."""
         return self.max_blocks_per_seq * self.block_size
 
+    def free_blocks(self, group: int) -> int:
+        """Allocatable blocks in one group's id space: truly free +
+        reclaimable LRU-cached."""
+        return len(self._free[group]) + len(self._lru[group])
+
     def n_free_blocks(self) -> int:
-        """Allocatable blocks: truly free + reclaimable LRU-cached."""
-        return len(self._free) + len(self._lru)
+        """Allocatable blocks of the TIGHTEST group — the binding
+        constraint on any allocation (every group must be able to cover
+        a new block). Identical to the per-pool count for non-windowed
+        (single-group) managers."""
+        return min(self.free_blocks(g) for g in range(self.n_groups))
 
     def n_cached_blocks(self) -> int:
-        """Unreferenced blocks kept warm in the prefix cache."""
-        return len(self._lru)
+        """Unreferenced blocks kept warm in the prefix cache (summed
+        over groups)."""
+        return sum(len(l) for l in self._lru)
 
     def n_free_slots(self) -> int:
         return sum(1 for s in self.seqs if s is None)
 
     def blocks_in_use(self) -> int:
-        """Blocks referenced by live sequences (shared blocks count once)."""
-        return self.n_blocks - self.n_free_blocks()
+        """Group-blocks referenced by live sequences, summed over
+        groups (shared blocks count once per group)."""
+        return sum(self.n_blocks - self.free_blocks(g)
+                   for g in range(self.n_groups))
 
     def utilization(self) -> float:
-        return self.blocks_in_use() / self.n_blocks
+        return self.blocks_in_use() / (self.n_blocks * self.n_groups)
 
     def free_block_frac(self) -> float:
-        """Allocatable fraction of the pool — the MorphServe-style
-        memory-pressure signal fed to the dual-precision controller."""
+        """Allocatable fraction of the TIGHTEST group's pool — the
+        MorphServe-style memory-pressure signal fed to the
+        dual-precision controller. With window reclamation the local
+        group keeps returning dead blocks, so this reflects honest
+        headroom rather than phantom pressure."""
         return self.n_free_blocks() / self.n_blocks
 
-    def table(self, idx: int):
-        """(max_blocks_per_seq,) int32 block table for one slot; holes
-        point at the trash block. A view into the persistent table —
-        valid until the next ensure/fork/release on this slot."""
-        return self._tables[idx]
+    def table(self, idx: int, group: int = 0):
+        """(max_blocks_per_seq,) int32 block table for one slot and
+        window group; holes point at the trash block. A view into the
+        persistent table — valid until the next
+        ensure/attach/fork/slide/release on this slot."""
+        return self._tables[group, idx]
 
     def tables(self):
         """(n_slots, max_blocks_per_seq) persistent int32 table array
-        (maintained incrementally; do not mutate)."""
+        for group 0 — the only group for non-windowed descriptors
+        (maintained incrementally; do not mutate). Windowed managers
+        should use `group_tables()`."""
+        return self._tables[0]
+
+    def group_tables(self):
+        """(n_groups, n_slots, max_blocks_per_seq) persistent int32
+        table array — one table per window group, all maintained
+        incrementally (do not mutate). `paged_step` gathers each
+        layer's KV through its group's table."""
         return self._tables
 
     # -- allocation core -------------------------------------------------------
-    def _alloc_block(self) -> int | None:
-        """Pop a free block; when the free list is dry, reclaim the
-        least-recently-used cached block (evicting its index entry) —
-        cached prefixes are always sacrificed before preemption is."""
-        if self._free:
-            return self._free.pop()
-        if self._lru:
-            b, _ = self._lru.popitem(last=False)
-            h = self._hash_of.pop(b)
-            del self._index[h]
+    def _alloc_block(self, g: int) -> int | None:
+        """Pop a free block from group g's id space; when the free list
+        is dry, reclaim the least-recently-used cached block (evicting
+        its index entry) — cached prefixes are always sacrificed before
+        preemption is."""
+        if self._free[g]:
+            return self._free[g].pop()
+        if self._lru[g]:
+            b, _ = self._lru[g].popitem(last=False)
+            h = self._hash_of.pop((g, b))
+            del self._index[(g, h)]
             self.prefix_stats["evictions"] += 1
             return b
         return None
 
-    def _release_block(self, b: int) -> None:
-        """Decref; park registered zero-ref blocks in the LRU cache,
-        return unregistered ones to the free list."""
-        self._ref[b] -= 1
-        assert self._ref[b] >= 0, f"refcount underflow on block {b}"
-        if self._ref[b] == 0:
-            if b in self._hash_of:
-                self._lru[b] = None          # most-recent end
+    def _release_block(self, g: int, b: int) -> None:
+        """Decref; park registered zero-ref blocks in the group's LRU
+        cache, return unregistered ones to the group's free list."""
+        self._ref[g][b] -= 1
+        assert self._ref[g][b] >= 0, f"refcount underflow on block {g}/{b}"
+        if self._ref[g][b] == 0:
+            if (g, b) in self._hash_of:
+                self._lru[g][b] = None       # most-recent end
             else:
-                self._free.append(b)
+                self._free[g].append(b)
 
     # -- sequence lifecycle ----------------------------------------------------
+    def _group_need(self, seq_len: int, window: int | None) -> int:
+        """Blocks one group must hold live for a `seq_len`-token
+        sequence: the full logical coverage for global groups, only the
+        lookback-window span for windowed ones (everything earlier is
+        slide-freed by the time the sequence reaches that length)."""
+        nb = -(-max(seq_len, 1) // self.block_size)
+        if not window:
+            return nb
+        q0 = max(seq_len - 1, 0)
+        return nb - max(0, (q0 - window + 1) // self.block_size)
+
     def try_allocate(self, request_id: str, seq_len: int, max_new: int,
-                     cached_blocks: int = 0) -> int | None:
+                     cached_blocks=0) -> int | None:
         """Claim a slot for a sequence (no blocks yet — `ensure` grows
         them chunk by chunk). None when no slot is free or when the
-        first chunk could not possibly be admitted (fewer free blocks
-        than the whole prompt needs — the admission watermark that keeps
-        preemption for decode-time growth, not thrashing admissions).
-        `cached_blocks` discounts prefix-cache hits from that watermark:
-        matched blocks cost nothing to re-establish."""
+        first chunk could not possibly be admitted (some window group
+        has fewer free blocks than the whole prompt needs in ITS id
+        space — the admission watermark that keeps preemption for
+        decode-time growth, not thrashing admissions). `cached_blocks`
+        discounts prefix-cache hits from that watermark — an int
+        (applied to every group) or a per-group sequence as returned by
+        `prefix_admit_discount`: matched blocks cost nothing to
+        re-establish."""
         if seq_len + max_new > self.capacity:
             raise ValueError(
                 f"request {request_id}: {seq_len}+{max_new} exceeds paged "
                 f"capacity {self.capacity}")
-        if -(-(seq_len + max_new) // self.block_size) > self.n_blocks:
+        if any(self._group_need(seq_len + max_new, w) > self.n_blocks
+               for w in self.group_windows):
             raise ValueError(
-                f"request {request_id}: needs more blocks than the whole "
-                f"pool holds ({self.n_blocks}) — would preempt-thrash forever")
-        need = -(-max(seq_len, 1) // self.block_size) - cached_blocks
-        if need > self.n_free_blocks():
+                f"request {request_id}: needs more blocks than a whole "
+                f"group pool holds ({self.n_blocks}) — would "
+                f"preempt-thrash forever")
+        if isinstance(cached_blocks, int):
+            cached_blocks = (cached_blocks,) * self.n_groups
+        if any(self._group_need(seq_len, w) - c > self.free_blocks(g)
+               for g, (w, c) in enumerate(zip(self.group_windows,
+                                              cached_blocks))):
             return None
         for i, s in enumerate(self.seqs):
             if s is None:
                 self._admissions += 1
-                self.seqs[i] = _Seq(request_id, [], 0, self._admissions)
+                self.seqs[i] = _Seq(
+                    request_id, [_Group() for _ in self.group_windows],
+                    0, self._admissions)
                 return i
         return None
 
-    def ensure(self, idx: int, n_tokens: int) -> bool:
-        """Grow slot `idx`'s block table to cover positions [0, n_tokens).
-        All-or-nothing; False when the free list (including reclaimable
-        cached blocks) runs dry (caller preempts or defers)."""
+    def slide_window(self, idx: int) -> int:
+        """Free every windowed-group block that has slid fully out of
+        the lookback window of all FUTURE queries (the next query sits
+        at `seq.length`, so positions <= length - window are dead).
+        Exclusively-held dead blocks go straight back to the free list
+        — and are EVICTED from the prefix index, so a slide-freed block
+        can never be prefix-matched for a local group again; blocks a
+        neighbour still shares are merely decref'd (their content is
+        intact for that holder). Returns the number of blocks freed.
+        Invoked by `ensure`/`max_coverable` so reclamation happens
+        before any allocation decision."""
         seq = self.seqs[idx]
         assert seq is not None, idx
-        need = -(-n_tokens // self.block_size) - len(seq.blocks)
-        if need <= 0:
+        freed = 0
+        for gi, (g, w) in enumerate(zip(seq.groups, self.group_windows)):
+            if not w:
+                continue
+            sp = min(max(0, (seq.length - w + 1) // self.block_size),
+                     len(g.blocks))
+            for j in range(g.slid, sp):
+                b = g.blocks[j]
+                if b == TRASH_BLOCK:
+                    continue
+                self._ref[gi][b] -= 1
+                assert self._ref[gi][b] >= 0, \
+                    f"refcount underflow on block {gi}/{b}"
+                if self._ref[gi][b] == 0:
+                    h = self._hash_of.pop((gi, b), None)
+                    if h is not None:
+                        del self._index[(gi, h)]
+                    self._free[gi].append(b)
+                    freed += 1
+                g.blocks[j] = TRASH_BLOCK
+                self._tables[gi, idx, j] = TRASH_BLOCK
+            g.slid = max(g.slid, sp)
+        self.window_freed_blocks += freed
+        return freed
+
+    def ensure(self, idx: int, n_tokens: int) -> bool:
+        """Grow slot `idx`'s block tables (every window group) to cover
+        positions [0, n_tokens), sliding windowed groups first so dead
+        local blocks fund the growth. All-or-nothing; False when the
+        free list (including reclaimable cached blocks) runs dry
+        (caller preempts or defers)."""
+        seq = self.seqs[idx]
+        assert seq is not None, idx
+        self.slide_window(idx)
+        nb = -(-n_tokens // self.block_size)
+        if all(len(g.blocks) >= nb for g in seq.groups):
             return True
-        if n_tokens > self.capacity or need > self.n_free_blocks():
+        if n_tokens > self.capacity or any(
+                max(0, nb - len(g.blocks)) > self.free_blocks(gi)
+                for gi, g in enumerate(seq.groups)):
             return False
-        for _ in range(need):
-            b = self._alloc_block()
-            assert b is not None          # guarded by n_free_blocks above
-            self._ref[b] = 1
-            self._tables[idx, len(seq.blocks)] = b
-            seq.blocks.append(b)
+        for gi, g in enumerate(seq.groups):
+            while len(g.blocks) < nb:
+                b = self._alloc_block(gi)
+                assert b is not None      # guarded by free_blocks above
+                self._ref[gi][b] = 1
+                self._tables[gi, idx, len(g.blocks)] = b
+                g.blocks.append(b)
         return True
+
+    def max_coverable(self, idx: int, start: int, want: int) -> int:
+        """Largest take <= want such that `ensure(idx, start + take)`
+        will succeed right now (window slides applied first): the
+        engine's chunk planner asks this instead of reimplementing
+        per-group block accounting."""
+        seq = self.seqs[idx]
+        assert seq is not None, idx
+        self.slide_window(idx)
+        avail = [self.free_blocks(gi) + len(g.blocks)
+                 for gi, g in enumerate(seq.groups)]
+        upper = min(start + want, self.capacity)
+        take = 0
+        # feasibility only changes at block boundaries: walk block counts
+        # (<= max_blocks_per_seq iterations), not tokens
+        bs = self.block_size
+        for nb in range(-(-(start + 1) // bs), -(-upper // bs) + 1):
+            if any(nb > a for a in avail):
+                break
+            take = min(nb * bs, upper) - start
+        return take
 
     def set_length(self, idx: int, n_tokens: int) -> None:
         seq = self.seqs[idx]
@@ -378,15 +592,17 @@ class BlockManager:
         seq.length = n_tokens
 
     def release(self, idx: int) -> None:
-        """Decref (not free) every block the sequence holds — shared
-        blocks survive for their other holders, registered blocks go to
-        the LRU cache."""
+        """Decref (not free) every block the sequence holds in any
+        group — shared blocks survive for their other holders,
+        registered blocks go to the LRU cache."""
         seq = self.seqs[idx]
         if seq is None:
             return
-        for b in reversed(seq.blocks):
-            self._release_block(b)
-        self._tables[idx, :] = TRASH_BLOCK
+        for gi, g in enumerate(seq.groups):
+            for b in reversed(g.blocks):
+                if b != TRASH_BLOCK:
+                    self._release_block(gi, b)
+        self._tables[:, idx, :] = TRASH_BLOCK
         self.seqs[idx] = None
 
     def youngest(self) -> int | None:
@@ -397,143 +613,221 @@ class BlockManager:
         return max(live)[1] if live else None
 
     # -- prefix caching --------------------------------------------------------
-    def _match(self, tokens) -> tuple[list[int], list[int]]:
-        """Longest cached full-block chain for `tokens`; returns
-        (block ids, chain hashes)."""
-        blocks: list[int] = []
+    def _match_plan(self, tokens
+                    ) -> tuple[int, list[tuple[int, list[int]]], list[int]]:
+        """Group-aware longest servable cached prefix of `tokens`.
+
+        Returns (matched tokens m, per-group (j_lo, block ids for
+        logical blocks [j_lo, m/bs)), chain hashes of the matched full
+        blocks). A prefill resuming at q0 = min(m, len(tokens)-1) — the
+        engine always recomputes >= 1 token — needs, per group, every
+        cached block covering positions [q0 - window + 1, m); global
+        groups (window None) need the whole from-root run [0, m).
+        Slide-freed blocks were evicted from the index, so they can
+        never be matched for a local group here."""
+        bs = self.block_size
+        empty = [(0, []) for _ in self.group_windows]
+        if not self.prefix_cache:
+            return 0, empty, []
         hashes: list[int] = []
         parent = _ROOT_HASH
-        bs = self.block_size
-        for i in range(len(tokens) // bs):
+        for i in range(min(len(tokens) // bs, self.max_blocks_per_seq)):
             h = _chain_hash(parent, tuple(tokens[i * bs: (i + 1) * bs]))
-            b = self._index.get(h)
-            if b is None:
-                break
-            blocks.append(b)
             hashes.append(h)
             parent = h
-        return blocks, hashes
+        m = len(hashes)
+        for gi, w in enumerate(self.group_windows):
+            if w:
+                continue
+            run = 0
+            for h in hashes:
+                if (gi, h) not in self._index:
+                    break
+                run += 1
+            m = min(m, run)
+        while m > 0:
+            q0 = min(m * bs, len(tokens) - 1)
+            plan: list[tuple[int, list[int]]] | None = []
+            # when a windowed group is missing block j, every candidate
+            # m' in (j, m) still needs j (j_lo shrinks with m), so the
+            # next viable candidate is m' = j — one jump per missing
+            # block keeps the whole search O(max_blocks_per_seq)
+            next_m = m - 1
+            for gi, w in enumerate(self.group_windows):
+                j_lo = 0 if not w else max(0, q0 - w + 1) // bs
+                blks: list[int] = []
+                for j in range(j_lo, m):
+                    b = self._index.get((gi, hashes[j]))
+                    if b is None:
+                        plan = None
+                        next_m = min(next_m, j)
+                        break
+                    blks.append(b)
+                if plan is None:
+                    break
+                plan.append((j_lo, blks))
+            if plan is not None:
+                return m * bs, plan, hashes[:m]
+            m = next_m
+        return 0, empty, []
 
     def lookup_prefix(self, tokens) -> int:
-        """Matched-prefix length in tokens (no side effects)."""
-        if not self.prefix_cache:
-            return 0
-        return len(self._match(tokens)[0]) * self.block_size
+        """Matched-prefix length in tokens (no side effects) — the
+        largest offset a prefill could resume at with every window
+        group's needed blocks cached."""
+        return self._match_plan(tokens)[0]
 
-    def prefix_admit_discount(self, tokens) -> int:
-        """Blocks the admission watermark may discount for `tokens`:
-        matched blocks held LIVE by other sequences (sharing them costs
-        nothing). Matched blocks parked in the LRU pool are already
-        counted by `n_free_blocks()`, so discounting them too would
-        double-count."""
+    def prefix_admit_discount(self, tokens) -> tuple[int, ...]:
+        """Per-group blocks the admission watermark may discount for
+        `tokens`: matched blocks held LIVE by other sequences (sharing
+        them costs nothing). Matched blocks parked in a group's LRU pool
+        are already counted by `free_blocks()`, so discounting them too
+        would double-count. Feed the result straight to
+        `try_allocate(cached_blocks=...)`."""
         if not self.prefix_cache:
-            return 0
-        return sum(1 for b in self._match(tokens)[0] if self._ref[b] > 0)
+            return (0,) * self.n_groups
+        _, plan, _ = self._match_plan(tokens)
+        return tuple(sum(1 for b in blks if self._ref[gi][b] > 0)
+                     for gi, (_, blks) in enumerate(plan))
 
     def attach_prefix(self, idx: int, tokens) -> int:
-        """Share the longest cached full-block prefix of `tokens` into
+        """Share the longest cached servable prefix of `tokens` into
         freshly-allocated slot `idx` (incref each matched block, pull
-        zero-ref ones out of the LRU pool). Returns the matched token
-        count; the caller starts prefill at that offset (recomputing at
-        least one token — `cow_for_write` forks the tail block if that
-        recompute lands in a shared one)."""
+        zero-ref ones out of the LRU pool). Windowed groups attach only
+        the blocks covering the resume position's lookback window and
+        start pre-slid below it. Returns the matched token count; the
+        caller starts prefill at that offset (recomputing at least one
+        token — `cow_for_write` forks the tail block if that recompute
+        lands in a shared one)."""
         seq = self.seqs[idx]
-        assert seq is not None and not seq.blocks, "attach before ensure"
+        assert seq is not None and not any(g.blocks for g in seq.groups), \
+            "attach before ensure"
         if not self.prefix_cache:
             return 0
-        blocks, hashes = self._match(tokens)
-        blocks = blocks[: self.max_blocks_per_seq]
-        hashes = hashes[: len(blocks)]
-        for j, b in enumerate(blocks):
-            if self._ref[b] == 0:
-                del self._lru[b]
-            self._ref[b] += 1
-            self._tables[idx, j] = b
-        seq.blocks = list(blocks)
-        seq.hashes = list(hashes)
-        seq.length = len(blocks) * self.block_size
+        m_tokens, plan, hashes = self._match_plan(tokens)
+        shared = 0
+        for gi, (g, (j_lo, blks)) in enumerate(zip(seq.groups, plan)):
+            g.blocks = [TRASH_BLOCK] * j_lo + list(blks)
+            g.hashes = list(hashes)
+            g.slid = j_lo
+            for j, b in enumerate(blks, start=j_lo):
+                if self._ref[gi][b] == 0:
+                    del self._lru[gi][b]
+                self._ref[gi][b] += 1
+                self._tables[gi, idx, j] = b
+            shared += len(blks)
+        seq.length = m_tokens
         st = self.prefix_stats
         st["queries"] += 1
         st["lookup_tokens"] += len(tokens)
-        st["hit_tokens"] += seq.length
-        st["blocks_shared"] += len(blocks)
-        return seq.length
+        st["hit_tokens"] += m_tokens
+        st["blocks_shared"] += shared
+        return m_tokens
 
     def cow_for_write(self, idx: int, start: int, end: int
-                      ) -> list[tuple[int, int]] | None:
+                      ) -> list[tuple[int, int, int]] | None:
         """Copy-on-write fork of every shared block that the token write
-        range [start, end) touches: allocate a private replacement,
-        decref the shared original, and return (src, dst) pairs whose
-        cache bytes the CALLER must copy before writing. Returns None
-        when a fork cannot be allocated (pool truly exhausted — caller
-        preempts). Blocks must already be ensured over the range."""
+        range [start, end) touches, in every window group: allocate a
+        private replacement in that group's id space, decref the shared
+        original, and return (group, src, dst) triples whose cache
+        bytes — the GROUP'S layer rows only — the CALLER must copy
+        before writing. Returns None when a fork cannot be allocated
+        (some group's pool truly exhausted — caller preempts). Blocks
+        must already be ensured over the range; slide-freed holes need
+        no fork (their writes land in the trash block)."""
         seq = self.seqs[idx]
         assert seq is not None and end <= len(seq.blocks) * self.block_size
         span = range(start // self.block_size, -(-end // self.block_size))
         # all-or-nothing: check every fork is allocatable BEFORE mutating,
         # so a failure never strands completed forks whose (src, dst)
         # pairs the caller would lose (bytes never copied -> stale reads)
-        if sum(1 for bi in span if self._ref[seq.blocks[bi]] > 1) \
-                > self.n_free_blocks():
-            return None
-        pairs: list[tuple[int, int]] = []
-        for bi in span:
-            src = seq.blocks[bi]
-            if self._ref[src] <= 1:
-                continue
-            dst = self._alloc_block()
-            assert dst is not None            # guarded above
-            self._ref[dst] = 1
-            self._release_block(src)
-            seq.blocks[bi] = dst
-            self._tables[idx, bi] = dst
-            pairs.append((src, dst))
-            self.prefix_stats["cow_forks"] += 1
-        return pairs
+        for gi, g in enumerate(seq.groups):
+            if sum(1 for bi in span
+                   if g.blocks[bi] != TRASH_BLOCK
+                   and self._ref[gi][g.blocks[bi]] > 1) \
+                    > self.free_blocks(gi):
+                return None
+        triples: list[tuple[int, int, int]] = []
+        for gi, g in enumerate(seq.groups):
+            for bi in span:
+                src = g.blocks[bi]
+                if src == TRASH_BLOCK or self._ref[gi][src] <= 1:
+                    continue
+                dst = self._alloc_block(gi)
+                assert dst is not None        # guarded above
+                self._ref[gi][dst] = 1
+                self._release_block(gi, src)
+                g.blocks[bi] = dst
+                self._tables[gi, idx, bi] = dst
+                triples.append((gi, src, dst))
+                self.prefix_stats["cow_forks"] += 1
+        return triples
 
     def commit(self, idx: int, n_tokens: int, tokens) -> None:
         """Record that positions [0, n_tokens) now hold the KV of
         `tokens[:n_tokens]`, and register every newly-FULL block in the
-        content-hash index so later sequences can share it. `tokens`
-        must be the sequence's full committed token stream."""
+        per-group content-hash index so later sequences can share it
+        (slide-freed holes extend the hash chain but register nothing).
+        `tokens` must be the sequence's full committed token stream."""
         self.set_length(idx, n_tokens)
         if not self.prefix_cache:
             return
         seq = self.seqs[idx]
         bs = self.block_size
-        parent = seq.hashes[-1] if seq.hashes else _ROOT_HASH
-        for bi in range(len(seq.hashes), n_tokens // bs):
-            h = _chain_hash(parent, tuple(tokens[bi * bs: (bi + 1) * bs]))
-            b = seq.blocks[bi]
-            if h not in self._index and b not in self._hash_of:
-                self._index[h] = b
-                self._hash_of[b] = h
-            seq.hashes.append(h)
-            parent = h
+        for gi, g in enumerate(seq.groups):
+            parent = g.hashes[-1] if g.hashes else _ROOT_HASH
+            for bi in range(len(g.hashes), n_tokens // bs):
+                h = _chain_hash(parent, tuple(tokens[bi * bs: (bi + 1) * bs]))
+                b = g.blocks[bi]
+                if b != TRASH_BLOCK and (gi, h) not in self._index \
+                        and (gi, b) not in self._hash_of:
+                    self._index[(gi, h)] = b
+                    self._hash_of[(gi, b)] = h
+                g.hashes.append(h)
+                parent = h
 
     # -- invariant audit (tests) ----------------------------------------------
     def check_invariants(self) -> None:
-        ref = [0] * (self.n_blocks + 1)
+        ref = [[0] * (self.n_blocks + 1) for _ in range(self.n_groups)]
         for s in self.seqs:
             if s is None:
                 continue
-            for b in s.blocks:
-                ref[b] += 1
+            for gi, g in enumerate(s.groups):
+                for b in g.blocks:
+                    if b != TRASH_BLOCK:
+                        ref[gi][b] += 1
         assert ref == self._ref, (ref, self._ref)
-        free, lru = set(self._free), set(self._lru)
-        assert not (free & lru), "block both free and cached"
-        for b in range(1, self.n_blocks + 1):
-            if self._ref[b] == 0:
-                assert (b in free) ^ (b in lru), \
-                    f"zero-ref block {b} neither free nor cached (or both)"
-            else:
-                assert b not in free and b not in lru, \
-                    f"live block {b} on the free/cached list"
-        assert set(self._hash_of) == set(self._index.values())
-        for h, b in self._index.items():
-            assert self._hash_of[b] == h
+        for gi in range(self.n_groups):
+            free, lru = set(self._free[gi]), set(self._lru[gi])
+            assert not (free & lru), f"group {gi} block both free and cached"
+            for b in range(1, self.n_blocks + 1):
+                if self._ref[gi][b] == 0:
+                    assert (b in free) ^ (b in lru), \
+                        f"zero-ref block {gi}/{b} neither free nor " \
+                        f"cached (or both)"
+                else:
+                    assert b not in free and b not in lru, \
+                        f"live block {gi}/{b} on the free/cached list"
+        assert set(self._hash_of) == {(g, b) for (g, _h), b
+                                      in self._index.items()}
+        for (gi, h), b in self._index.items():
+            assert self._hash_of[(gi, b)] == h
+            assert b not in self._free[gi], \
+                f"indexed block {gi}/{b} on the free list"
         for i, s in enumerate(self.seqs):
-            row = np.full(self.max_blocks_per_seq, TRASH_BLOCK, np.int32)
-            if s is not None:
-                row[: len(s.blocks)] = s.blocks
-            assert (self._tables[i] == row).all(), f"stale table row {i}"
+            for gi in range(self.n_groups):
+                row = np.full(self.max_blocks_per_seq, TRASH_BLOCK, np.int32)
+                if s is not None:
+                    gl = s.groups[gi].blocks
+                    row[: len(gl)] = gl
+                assert (self._tables[gi, i] == row).all(), \
+                    f"stale table row (group {gi}, slot {i})"
+            if s is None:
+                continue
+            for g, w in zip(s.groups, self.group_windows):
+                if not w:
+                    assert g.slid == 0, "global group slid"
+                assert all(b == TRASH_BLOCK for b in g.blocks[: g.slid]), \
+                    "live block below the slide point"
+                assert all(b != TRASH_BLOCK for b in g.blocks[g.slid:]), \
+                    "hole above the slide point"

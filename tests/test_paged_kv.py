@@ -55,6 +55,16 @@ def tiny_hybrid():
     return cfg, to_serving(params)
 
 
+@pytest.fixture(scope="module")
+def tiny_swa():
+    """Reduced gemma3: 2 layers (one local sliding-window, one global),
+    window 19 — deliberately odd so it is never block-aligned, and
+    smaller than every prompt the sweep uses."""
+    cfg = ARCHS["gemma3-1b"].reduced()
+    params = M.init_params(jax.random.PRNGKey(0), cfg)
+    return cfg, to_serving(params)
+
+
 class TestBlockManager:
     def test_allocate_extend_release_conserves_blocks(self):
         bm = BlockManager(n_slots=2, block_size=4, n_blocks=8,
@@ -392,12 +402,12 @@ class TestPrefixCacheBlockManager:
         bm.check_invariants()
         assert matched == 12
         assert bm.seqs[b].blocks == bm.seqs[a].blocks
-        assert bm._ref[bm.seqs[a].blocks[0]] == 2
+        assert bm._ref[0][bm.seqs[a].blocks[0]] == 2
         # shared blocks count once toward pool usage
         assert bm.blocks_in_use() == 3
         bm.release(a)
         bm.check_invariants()
-        assert bm._ref[bm.seqs[b].blocks[0]] == 1
+        assert bm._ref[0][bm.seqs[b].blocks[0]] == 1
         assert bm.n_cached_blocks() == 0             # still referenced by b
 
     def test_cow_fork_gives_private_copy(self):
@@ -409,10 +419,11 @@ class TestPrefixCacheBlockManager:
         shared_tail = bm.seqs[b].blocks[1]
         pairs = bm.cow_for_write(b, 7, 8)            # rewrite last token
         bm.check_invariants()
-        assert pairs and pairs[0][0] == shared_tail
+        assert pairs and pairs[0][:2] == (0, shared_tail)
         assert bm.seqs[b].blocks[1] != shared_tail   # private now
         assert bm.seqs[a].blocks[1] == shared_tail   # holder untouched
-        assert bm._ref[shared_tail] == 1 and bm._ref[bm.seqs[b].blocks[1]] == 1
+        assert bm._ref[0][shared_tail] == 1 \
+            and bm._ref[0][bm.seqs[b].blocks[1]] == 1
         assert bm.cow_for_write(b, 7, 8) == []       # idempotent: now private
 
     def test_lru_reclaim_before_preemption(self):
@@ -463,7 +474,7 @@ class TestPrefixCacheBlockManager:
             else:
                 bm.lookup_prefix(streams[rng.randint(len(streams))])
             bm.check_invariants()
-            assert all(r >= 0 for r in bm._ref)
+            assert all(r >= 0 for grp in bm._ref for r in grp)
         for idx in list(live):
             bm.release(idx)
         bm.check_invariants()
@@ -770,6 +781,172 @@ class TestMLAPagedServing:
         eng.run()
         assert "fp8" in ctrl.history, \
             "MLA latent-block headroom never engaged FP8"
+
+
+class TestSlidingWindowPagedServing:
+    """gemma3-style sliding-window serving: per-layer-group block tables
+    with mid-generation window-slide reclamation of local-layer blocks.
+    The tiny config's window (19) is odd — never block-aligned — and
+    smaller than every prompt here, so every test crosses window
+    boundaries mid-block."""
+
+    def test_descriptor_carries_window_groups(self, tiny_swa):
+        cfg, _ = tiny_swa
+        assert cfg.sliding_window == 19, "reduced window must be odd"
+        desc = M.cache_descriptor(cfg)
+        assert [g.name for g in desc.groups] == ["global", "local"]
+        assert desc.group_windows == (None, 19)
+        # reduced gemma3: layer 1 global (swa_pattern 2), layer 0 local
+        assert list(desc.layer_group_map(cfg.n_layers)) == [1, 0]
+
+    def test_engine_matches_fixed_slot_reference(self, tiny_swa):
+        """Acceptance: with window reclamation, prefix caching, and the
+        paged path all enabled, greedy outputs match the fixed-slot
+        reference exactly — and reclamation actually fired.
+        (Deliberately NOT marked slow — this is the CI fast lane's
+        gemma3 paged smoke test.)"""
+        cfg, sparams = tiny_swa
+        prompt = list(range(4, 84))                  # 80 tokens >= 4x window
+        eng = Engine(cfg, sparams, n_slots=2, capacity=96,
+                     forced_mode="fp16", block_size=8)
+        eng.submit(Request("r0", prompt, max_new=6))
+        fin = eng.run()
+        assert fin[0].output == _greedy_fixed_slot_reference(
+            cfg, sparams, prompt, 6), "diverged from fixed-slot reference"
+        assert eng.stats["window_reclaimed_blocks"] > 0, \
+            "long prompt never slid any local block"
+        eng.blocks.check_invariants()
+        assert eng.blocks.blocks_in_use() == 0
+
+    @pytest.mark.slow
+    def test_chunked_matches_monolithic_bit_exact(self, tiny_swa):
+        """Chunked prefill of a prompt >2x the window must be
+        BIT-identical to monolithic: local layers mask to the same
+        window regardless of chunk split."""
+        cfg, sparams = tiny_swa
+        rt = Runtime(mode="fp16", backend="ref", dtype=jnp.float32)
+        bs, mb = 16, 4
+        prompt = list(range(5, 50))                  # 45 tokens
+        plen = len(prompt)
+        table = np.zeros((1, mb), np.int32)
+        table[0] = [1, 2, 3, 4]
+
+        def run(chunks):
+            caches = M.init_paged_cache(cfg, n_total_blocks=9, block_size=bs)
+            out, start = None, 0
+            for take in chunks:
+                width = take if take > 16 else 16
+                toks = np.zeros((1, width), np.int32)
+                toks[0, :take] = prompt[start: start + take]
+                out, caches = M.paged_step(
+                    rt, sparams, cfg, jnp.asarray(toks), caches,
+                    jnp.asarray(table),
+                    q_offset=jnp.asarray([start], jnp.int32),
+                    kv_len=jnp.asarray([start + take], jnp.int32),
+                    block_size=bs,
+                    logit_position=jnp.asarray([take - 1], jnp.int32))
+                start += take
+            assert start == plen
+            return np.asarray(out)
+
+        mono = run([plen])
+        # 19-token window crosses both chunk seams and block boundaries
+        assert (run([16, 16, 13]) == mono).all()
+        assert (run([7, 9, 11, 9, 9]) == mono).all()
+        assert (run([1] * plen) == mono).all()
+
+    @pytest.mark.slow
+    def test_window_reclaim_on_equals_off_and_frees_blocks(self, tiny_swa):
+        """Acceptance criterion: with an ample pool, window-slide
+        reclamation changes NOTHING about the outputs while steady-state
+        decode holds strictly fewer live blocks than the
+        no-reclamation baseline."""
+        cfg, sparams = tiny_swa
+        prompts = [list(range(4, 84)), list(range(100, 180))]  # 80 >= 4x19
+
+        def run(reclaim):
+            eng = Engine(cfg, sparams, n_slots=2, capacity=96,
+                         forced_mode="fp16", block_size=8,
+                         window_reclaim=reclaim)
+            for i, p in enumerate(prompts):
+                eng.submit(Request(f"r{i}", p, max_new=10))
+            steady = []
+            while eng.queue or eng.active or eng.prefilling:
+                eng.step()
+                if len(eng.active) == 2 and not eng.prefilling:
+                    steady.append(eng.blocks.blocks_in_use())
+            fin = {r.request_id: r.output for r in eng.finished}
+            eng.blocks.check_invariants()
+            return fin, steady, eng.stats["window_reclaimed_blocks"]
+
+        out_on, steady_on, freed_on = run(True)
+        out_off, steady_off, freed_off = run(False)
+        assert out_on == out_off, "window reclamation changed outputs"
+        assert freed_on > 0 and freed_off == 0
+        assert len(steady_on) == len(steady_off)
+        assert steady_on[-1] < steady_off[-1], \
+            f"no steady-state saving: {steady_on[-1]} vs {steady_off[-1]}"
+        # every steady-decode step holds no MORE blocks than the baseline
+        assert all(a <= b for a, b in zip(steady_on, steady_off))
+
+    @pytest.mark.slow
+    def test_prefix_caching_on_off_bit_exact_with_sharing(self, tiny_swa):
+        """Group-aware prefix caching: a second request sharing a
+        40-token prefix attaches the global chain plus only the local
+        blocks inside its resume window, and greedy outputs are
+        bit-exact with caching on vs off."""
+        cfg, sparams = tiny_swa
+        shared = list(range(7, 47))                  # 5 blocks of 8
+        prompts = [shared + list(range(60 + 5 * i, 65 + 5 * i))
+                   for i in range(2)]
+        runs = {}
+        for pc in (True, False):
+            # chunk budget 24: r0 commits 3 full prefix blocks before r1
+            # admits, and r0 has not yet slid past r1's resume lookback
+            eng = Engine(cfg, sparams, n_slots=3, capacity=96,
+                         forced_mode="fp16", block_size=8, chunk_tokens=24,
+                         prefix_cache=pc)
+            for i, p in enumerate(prompts):
+                eng.submit(Request(f"r{i}", p, max_new=6))
+            runs[pc] = ({r.request_id: r.output for r in eng.run()},
+                        eng.prefix_cache_stats())
+            eng.blocks.check_invariants()
+        assert runs[True][0] == runs[False][0], \
+            "window-aware prefix sharing changed greedy outputs"
+        assert runs[True][1]["blocks_saved"] >= 4, \
+            "global+local prefix blocks never shared"
+
+    @pytest.mark.slow
+    def test_preemption_under_sharing_matches_ample_pool(self, tiny_swa):
+        """Scarce pool + shared prefixes + sliding windows: preemption
+        and requeue (re-attach pre-slides the local group) reproduce the
+        ample-pool outputs exactly."""
+        cfg, sparams = tiny_swa
+        shared = list(range(4, 12))
+        prompts = [shared + list(range(30 + 4 * i, 42 + 4 * i))
+                   for i in range(3)]                # 20 tokens each
+
+        def run(n_blocks):
+            eng = Engine(cfg, sparams, n_slots=3, capacity=48,
+                         forced_mode="fp16", block_size=4,
+                         n_blocks=n_blocks, chunk_tokens=20)
+            for i, p in enumerate(prompts):
+                eng.submit(Request(f"r{i}", p, max_new=16))
+            fin = {r.request_id: r.output for r in eng.run()}
+            eng.blocks.check_invariants()
+            assert eng.blocks.blocks_in_use() == 0
+            return fin, eng.stats["preemptions"]
+
+        ample, p0 = run(n_blocks=64)
+        scarce, p1 = run(n_blocks=18)
+        assert p0 == 0 and p1 >= 1, (p0, p1)
+        assert ample == scarce, "preemption changed generated tokens"
+        assert all(len(o) == 16 for o in scarce.values())
+        # acceptance: bit-exact against the fixed-slot reference with
+        # reclamation, prefix caching, and preemption all enabled
+        for i, p in enumerate(prompts):
+            assert scarce[f"r{i}"] == _greedy_fixed_slot_reference(
+                cfg, sparams, p, 16), f"r{i} diverged from fixed-slot ref"
 
 
 class TestHybridPagedServing:

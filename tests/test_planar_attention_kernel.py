@@ -1,13 +1,17 @@
 """Planar (NestedKV) decode-attention Pallas kernel vs oracles:
 fp16 path must match exact-f16-cache attention; fp8 path must match
-attention over the e5m2-truncated cache. Sweeps shapes/lengths."""
+attention over the e5m2-truncated cache. Sweeps shapes/lengths, plus a
+sliding-window (gemma3 local-layer) case on the paged variant against
+the dense `_causal_window_mask` arithmetic at window-boundary
+positions."""
 
 import numpy as np
 import jax.numpy as jnp
 import pytest
 
 from repro.core import nestedfp as nf
-from repro.kernels.planar_decode_attention import planar_decode_attention
+from repro.kernels.planar_decode_attention import (
+    paged_planar_decode_attention, planar_decode_attention)
 from repro.models.layers import attn_core_decode
 
 RNG = np.random.RandomState(7)
@@ -47,6 +51,79 @@ def test_fp8_matches_e5m2_oracle(shape):
     got = planar_decode_attention(q, k_hi, k_hi, v_hi, v_hi, lens,
                                   fp8=True, block_c=128, interpret=True)
     want = attn_core_decode(q[:, None], k8, v8, lens)[:, 0]
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=2e-3, atol=2e-3)
+
+
+def _shuffled_pool(rng, b, cap, hkv, d, bs, mb):
+    """Logical (B, Cap) K/V plus a shuffled physical pool + block
+    tables realizing the same logical layout."""
+    nb = b * mb + 1
+    k = jnp.asarray(rng.randn(b, cap, hkv, d).astype(np.float16))
+    v = jnp.asarray(rng.randn(b, cap, hkv, d).astype(np.float16))
+    tables = np.zeros((b, mb), np.int32)
+    ids = list(range(1, nb))
+    rng.shuffle(ids)
+    pool_k = np.zeros((nb, bs, hkv, d), np.float16)
+    pool_v = np.zeros((nb, bs, hkv, d), np.float16)
+    t = 0
+    for bb in range(b):
+        for m in range(mb):
+            pid = ids[t]
+            t += 1
+            tables[bb, m] = pid
+            pool_k[pid] = np.asarray(k[bb, m * bs: (m + 1) * bs])
+            pool_v[pid] = np.asarray(v[bb, m * bs: (m + 1) * bs])
+    return k, v, jnp.asarray(tables), jnp.asarray(pool_k), jnp.asarray(pool_v)
+
+
+@pytest.mark.parametrize("fp8", [False, True])
+def test_windowed_paged_matches_window_mask_reference(fp8):
+    """Sliding-window (gemma3 local-layer) paged decode: the kernel's
+    window mask must reproduce the dense `_causal_window_mask`
+    arithmetic (attn_core_decode applies the same `_apply_window`
+    predicate) at the boundary positions — len == window, window +- 1,
+    and a length whose window crosses a physical block boundary."""
+    b, h, hkv, d = 4, 8, 4, 64
+    bs, mb, window = 16, 4, 24            # window spans 1.5 blocks
+    cap = bs * mb
+    rng = np.random.RandomState(13)
+    q = jnp.asarray(rng.randn(b, h, d).astype(np.float16))
+    k, v, tables, pk, pv = _shuffled_pool(rng, b, cap, hkv, d, bs, mb)
+    # boundaries: exactly the window, one inside, one outside, and a
+    # length where [len-window, len) straddles a block edge (40-24=16)
+    lens = jnp.asarray([window, window - 1, window + 1, 40], jnp.int32)
+    k_hi, k_lo = nf.split_bytes(pk)
+    v_hi, v_lo = nf.split_bytes(pv)
+    got = paged_planar_decode_attention(q, k_hi, k_lo, v_hi, v_lo, tables,
+                                        lens, fp8=fp8, window=window,
+                                        interpret=True)
+    if fp8:
+        k = nf.e5m2_view(nf.split_bytes(k)[0], jnp.float16)
+        v = nf.e5m2_view(nf.split_bytes(v)[0], jnp.float16)
+    want = attn_core_decode(q[:, None], k, v, lens, window=window)[:, 0]
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=2e-3, atol=2e-3)
+    # the window must actually bite: a global run over the same pool
+    # differs for every row longer than the window
+    glob = paged_planar_decode_attention(q, k_hi, k_lo, v_hi, v_lo, tables,
+                                         lens, fp8=fp8, interpret=True)
+    assert np.abs(np.asarray(got)[[0, 2, 3]]
+                  - np.asarray(glob)[[0, 2, 3]]).max() > 1e-4
+
+
+def test_windowed_dense_planar_matches_reference():
+    """The fixed-slot planar kernel honors the same window mask."""
+    b, h, hkv, d, cap = 2, 8, 4, 64, 256
+    q, k, v, _ = _setup(b, h, hkv, d, cap)
+    lens = jnp.asarray([cap, 97], jnp.int32)
+    window = 33
+    k_hi, k_lo = nf.split_bytes(k)
+    v_hi, v_lo = nf.split_bytes(v)
+    got = planar_decode_attention(q, k_hi, k_lo, v_hi, v_lo, lens,
+                                  fp8=False, block_c=128, window=window,
+                                  interpret=True)
+    want = attn_core_decode(q[:, None], k, v, lens, window=window)[:, 0]
     np.testing.assert_allclose(np.asarray(got), np.asarray(want),
                                rtol=2e-3, atol=2e-3)
 

@@ -123,14 +123,21 @@ class TestTraceInvariants:
 def _descriptor(kind: str):
     """Real per-family cache descriptors (kvcache.py CacheDescriptor)
     derived from assigned archs: gqa (qwen), mla (deepseek-v3 latents),
-    hybrid (zamba2 shared-attn + slot-resident SSM state)."""
+    hybrid (zamba2 shared-attn + slot-resident SSM state), swa (gemma3
+    sliding-window layer groups)."""
     from repro.configs import ARCHS
     from repro.models.model import cache_descriptor
 
     arch = {"gqa": "qwen1.5-0.5b", "mla": "deepseek-v3-671b",
-            "hybrid": "zamba2-2.7b"}[kind]
+            "hybrid": "zamba2-2.7b", "swa": "gemma3-1b"}[kind]
     desc = cache_descriptor(ARCHS[arch].reduced())
-    assert desc.kind == kind
+    assert desc.kind == ("gqa" if kind == "swa" else kind)
+    if kind == "swa":
+        # one global + one windowed local group, window odd (never
+        # block-aligned)
+        assert desc.group_windows == (None, 19)
+    else:
+        assert desc.group_windows == (None,)
     return desc
 
 
@@ -143,12 +150,17 @@ class TestBlockManagerCOWInvariants:
     on either, COW forks are atomic, the hash index stays bijective,
     and the incremental table array never goes stale (check_invariants
     audits all of it). Recurrent descriptors run with the prefix cache
-    off — exactly as the engine instantiates them."""
+    off — exactly as the engine instantiates them. The swa (gemma3)
+    descriptor additionally mixes window SLIDE-FREES into the soup:
+    refcounts and the free list stay conserved, no block is ever both
+    free and in a live table, and a slide-freed block never reappears
+    through `lookup_prefix`/`_match_plan` for the local group (it is
+    evicted from the index the moment its last holder slides past)."""
 
-    @pytest.mark.parametrize("kind", ["gqa", "mla", "hybrid"])
+    @pytest.mark.parametrize("kind", ["gqa", "mla", "hybrid", "swa"])
     @settings(max_examples=40, deadline=None)
     @given(seed=st.integers(0, 2**31 - 1),
-           ops=st.lists(st.integers(0, 4), min_size=10, max_size=120))
+           ops=st.lists(st.integers(0, 5), min_size=10, max_size=120))
     def test_op_soup(self, kind, seed, ops):
         from repro.serving.kvcache import BlockManager, SlotManager
 
@@ -156,12 +168,14 @@ class TestBlockManagerCOWInvariants:
         assert (desc.bytes_per_token > 0) == bool(desc.planes)
         assert (desc.bytes_per_slot > 0) == bool(desc.slot_planes)
         rng = np.random.RandomState(seed % (2**31))
-        bm = BlockManager(n_slots=3, block_size=4, n_blocks=10,
-                          max_blocks_per_seq=5,
-                          prefix_cache=desc.prefix_cacheable)
+        bm = BlockManager(n_slots=3, block_size=4,
+                          n_blocks=10, max_blocks_per_seq=8,
+                          prefix_cache=desc.prefix_cacheable,
+                          group_windows=desc.group_windows)
         # slot-resident state side claimed/released in lockstep
-        sm = SlotManager(3, 20) if desc.slot_planes else None
-        streams = [list(range(s, s + 16)) for s in (0, 0, 32)]
+        sm = SlotManager(3, 32) if desc.slot_planes else None
+        # streams longer than the swa window (19) so slides actually fire
+        streams = [list(range(s, s + 28)) for s in (0, 0, 32)]
         live: list[int] = []
         for op in ops:
             if op == 0 and bm.n_free_slots():
@@ -179,8 +193,10 @@ class TestBlockManagerCOWInvariants:
                 idx = live[rng.randint(len(live))]
                 toks = streams[rng.randint(len(streams))]
                 n = rng.randint(1, len(toks) + 1)
-                if bm.ensure(idx, n) and \
-                        bm.cow_for_write(idx, rng.randint(n), n) is not None:
+                if bm.ensure(idx, max(n, bm.seqs[idx].length)) \
+                        and n >= bm.seqs[idx].length \
+                        and bm.cow_for_write(idx, rng.randint(n), n) \
+                        is not None:
                     bm.commit(idx, n, toks)
             elif op == 2 and live:
                 idx = live.pop(rng.randint(len(live)))
@@ -189,6 +205,22 @@ class TestBlockManagerCOWInvariants:
                     sm.release(idx)
             elif op == 3:
                 bm.lookup_prefix(streams[rng.randint(len(streams))])
+            elif op == 4 and live:
+                # explicit window slide: capture what it frees and prove
+                # none of it can ever be prefix-matched again
+                idx = live[rng.randint(len(live))]
+                before = [set(f) for f in bm._free]
+                bm.slide_window(idx)
+                slid_freed = {(g, b) for g, f in enumerate(bm._free)
+                              for b in set(f) - before[g]}
+                assert all(gb not in bm._hash_of for gb in slid_freed), \
+                    "slide-freed block still registered"
+                for toks in streams:
+                    _, plan, _ = bm._match_plan(toks)
+                    matched = {(g, b) for g, (_, blks) in enumerate(plan)
+                               for b in blks}
+                    assert not (matched & slid_freed), \
+                        "slide-freed block reappeared via prefix match"
             bm.check_invariants()
             if sm is not None:
                 assert set(sm.active()) == set(live), \
