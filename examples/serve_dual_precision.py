@@ -24,11 +24,46 @@ from repro.models import model as M
 from repro.models.convert import to_serving, serving_memory_bytes
 from repro.serving.engine import Engine, Request
 
-ap = argparse.ArgumentParser()
+ap = argparse.ArgumentParser(
+    formatter_class=argparse.RawDescriptionHelpFormatter,
+    epilog="""\
+one-dispatch engine steps
+  Every engine iteration costs O(1) jitted dispatches however many
+  sequences are prefilling or decoding: all planned prompt chunks fuse
+  into ONE batched ragged paged_step (per-row q_offset/kv_len/
+  logit_position carry the raggedness), block tables are DEVICE-resident
+  (incremental jitted scatters on allocate/slide/COW instead of a full
+  re-upload per step), and greedy sampling is fused into the step so
+  decode pulls (B,) int32 token ids — not (B, vocab) logits — with one
+  host sync at the end of the step. `benchmarks/bench_kernel_overhead.py`
+  reports this as the engine_dispatch/* rows (prefill_dispatches_per_step
+  == 1, table_h2d_bytes_per_decode_step << full table), consolidated
+  into BENCH_results.json by `python -m benchmarks.run`.
+
+--attn-backend selection
+  ref     pure-jnp block-table gather attention (default; every family)
+  pallas  planar decode attention runs in the block-table
+          scalar-prefetch Pallas kernel (kernels/
+          planar_decode_attention.py): fp16 mode rejoins the NestedKV
+          byte planes in-kernel, fp8 mode DMAs ONLY the hi planes, and
+          gemma3 sliding windows ride a traced per-layer window operand.
+          Requires --kv-planar (GQA archs); anything the kernel cannot
+          serve (prefill chunks, MLA/hybrid, f16 caches) falls back to
+          the ref gather path. Interpret-mode (slow, exact) off-TPU.
+""")
 ap.add_argument("--arch", default="qwen3-8b", choices=sorted(ARCHS),
                 help="architecture (reduced variant); any decoder-only "
                      "family serves through the paged engine")
+ap.add_argument("--attn-backend", default="ref", choices=["ref", "pallas"],
+                help="paged decode attention backend (see epilog); "
+                     "pallas requires --kv-planar")
+ap.add_argument("--kv-planar", action="store_true",
+                help="store GQA KV as NestedKV byte planes (fp8 decode "
+                     "reads half the cache bytes)")
 args = ap.parse_args()
+if args.attn_backend == "pallas" and not args.kv_planar:
+    ap.error("--attn-backend pallas serves the byte-planar NestedKV "
+             "cache; pass --kv-planar")
 
 cfg = ARCHS[args.arch].reduced()
 params = M.init_params(jax.random.PRNGKey(0), cfg)
@@ -43,7 +78,8 @@ print(f"cache descriptor: {desc.kind}, {desc.bytes_per_token} paged B/token, "
 ctrl = DualPrecisionController(SLOConfig(tpot_ms=33.3, hysteresis_steps=3),
                                fp16_ms_per_token=0.8, fp8_ms_per_token=0.4,
                                fixed_overhead_ms=2.0)
-eng = Engine(cfg, sparams, n_slots=8, capacity=128, controller=ctrl)
+eng = Engine(cfg, sparams, n_slots=8, capacity=128, controller=ctrl,
+             attn_backend=args.attn_backend, kv_planar=args.kv_planar)
 
 rng = np.random.RandomState(1)
 # every request opens with the same system prompt — on prefix-cacheable
@@ -82,4 +118,12 @@ if windowed:
           f"local-layer blocks reclaimed mid-generation")
     assert eng.stats["window_reclaimed_blocks"] > 0, \
         "long decode never slid a local block"
+st = eng.stats
+steps = max(eng.iteration, 1)
+print(f"dispatch accounting over {steps} steps: "
+      f"{st['prefill_dispatches']/steps:.2f} prefill + "
+      f"{st['decode_dispatches']/steps:.2f} decode + "
+      f"{st['aux_dispatches']/steps:.2f} aux dispatches/step, "
+      f"{(st['h2d_bytes'] + eng.blocks.table_h2d_bytes)/steps:.0f} "
+      f"h2d B/step")
 print("finished requests:", len(eng.finished))

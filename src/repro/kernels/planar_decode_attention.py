@@ -31,26 +31,28 @@ def _join(hi, lo):
 
 def _kernel_fp16(q_ref, khi_ref, klo_ref, vhi_ref, vlo_ref, lens_ref,
                  o_ref, m_ref, l_ref, acc_ref, *, n_blocks, block_c,
-                 window=None):
+                 window=None, win_ref=None):
     _attend(q_ref,
             _join(khi_ref[0, 0], klo_ref[0, 0]),
             _join(vhi_ref[0, 0], vlo_ref[0, 0]),
             lens_ref, o_ref, m_ref, l_ref, acc_ref,
-            n_blocks=n_blocks, block_c=block_c, window=window)
+            n_blocks=n_blocks, block_c=block_c, window=window,
+            win_ref=win_ref)
 
 
 def _kernel_fp8(q_ref, khi_ref, vhi_ref, lens_ref,
                 o_ref, m_ref, l_ref, acc_ref, *, n_blocks, block_c,
-                window=None):
+                window=None, win_ref=None):
     k = jax.lax.bitcast_convert_type(khi_ref[0, 0], jnp.float8_e5m2)
     v = jax.lax.bitcast_convert_type(vhi_ref[0, 0], jnp.float8_e5m2)
     _attend(q_ref, k.astype(jnp.float16), v.astype(jnp.float16),
             lens_ref, o_ref, m_ref, l_ref, acc_ref,
-            n_blocks=n_blocks, block_c=block_c, window=window)
+            n_blocks=n_blocks, block_c=block_c, window=window,
+            win_ref=win_ref)
 
 
 def _attend(q_ref, k, v, lens_ref, o_ref, m_ref, l_ref, acc_ref, *,
-            n_blocks, block_c, window=None):
+            n_blocks, block_c, window=None, win_ref=None):
     b = pl.program_id(0)
     ci = pl.program_id(2)
 
@@ -73,6 +75,12 @@ def _attend(q_ref, k, v, lens_ref, o_ref, m_ref, l_ref, acc_ref, *,
         # at position len-1, so only keys with kpos > len-1-window attend
         # (same predicate as layers._apply_window)
         s = jnp.where(kpos > lens_ref[b] - 1 - window, s, NEG_INF)
+    elif win_ref is not None:
+        # traced window from SMEM (<= 0 means global): the same predicate
+        # with the window read at run time, so one compiled kernel serves
+        # every layer of a scanned local/global stack
+        w = win_ref[0]
+        s = jnp.where((w <= 0) | (kpos > lens_ref[b] - 1 - w), s, NEG_INF)
 
     m_prev = m_ref[...]                               # (G, 1)
     m_new = jnp.maximum(m_prev, s.max(axis=-1, keepdims=True))
@@ -90,28 +98,32 @@ def _attend(q_ref, k, v, lens_ref, o_ref, m_ref, l_ref, acc_ref, *,
                     / jnp.maximum(l_ref[...], 1e-30)).astype(o_ref.dtype)
 
 
-def _paged_kernel_fp16(tables_ref, lens_ref, q_ref, khi_ref, klo_ref,
-                       vhi_ref, vlo_ref, o_ref, m_ref, l_ref, acc_ref, *,
-                       n_blocks, block_c, window=None):
+def _paged_kernel_fp16(tables_ref, lens_ref, win_ref, q_ref, khi_ref,
+                       klo_ref, vhi_ref, vlo_ref, o_ref, m_ref, l_ref,
+                       acc_ref, *, n_blocks, block_c, window=None,
+                       dyn_window=False):
     del tables_ref      # consumed by the index maps
     _kernel_fp16(q_ref, khi_ref, klo_ref, vhi_ref, vlo_ref, lens_ref,
                  o_ref, m_ref, l_ref, acc_ref,
-                 n_blocks=n_blocks, block_c=block_c, window=window)
+                 n_blocks=n_blocks, block_c=block_c, window=window,
+                 win_ref=win_ref if dyn_window else None)
 
 
-def _paged_kernel_fp8(tables_ref, lens_ref, q_ref, khi_ref, vhi_ref,
-                      o_ref, m_ref, l_ref, acc_ref, *, n_blocks, block_c,
-                      window=None):
+def _paged_kernel_fp8(tables_ref, lens_ref, win_ref, q_ref, khi_ref,
+                      vhi_ref, o_ref, m_ref, l_ref, acc_ref, *, n_blocks,
+                      block_c, window=None, dyn_window=False):
     del tables_ref
     _kernel_fp8(q_ref, khi_ref, vhi_ref, lens_ref,
                 o_ref, m_ref, l_ref, acc_ref,
-                n_blocks=n_blocks, block_c=block_c, window=window)
+                n_blocks=n_blocks, block_c=block_c, window=window,
+                win_ref=win_ref if dyn_window else None)
 
 
 @functools.partial(jax.jit, static_argnames=("fp8", "window", "interpret"))
 def paged_planar_decode_attention(q, k_hi, k_lo, v_hi, v_lo, tables, lens, *,
                                   fp8: bool = False,
                                   window: int | None = None,
+                                  window_arr=None,
                                   interpret: bool = False) -> jax.Array:
     """Block-paged variant: q: (B, H, D); planes: (NB, BS, Hkv, D) uint8
     physical pools (BS = KV block size, one grid step per block); tables:
@@ -129,20 +141,32 @@ def paged_planar_decode_attention(q, k_hi, k_lo, v_hi, v_lo, tables, lens, *,
     `_causal_window_mask`, so slide-freed table holes (pointing at the
     trash block) can never contribute. On real tables the engine only
     keeps the last ceil(window/BS)+1 blocks resident, so the masked-out
-    grid steps DMA the one trash block instead of dead cache."""
+    grid steps DMA the one trash block instead of dead cache.
+
+    window_arr (traced, (1,) int32, <= 0 means global): the same mask
+    with the window read at run time — the engine's scanned decoder
+    stack carries a per-layer window array, so the kernel must accept a
+    traced value to compile ONCE for a mixed local/global stack. Applies
+    only when `window` is None; the masks are arithmetic-identical, so
+    window=w and window_arr=[w] produce bit-equal outputs."""
     bsz, h, d = q.shape
     bs_tok, hkv = k_hi.shape[1], k_hi.shape[2]
     mb = tables.shape[1]
     g = h // hkv
     qg = q.reshape(bsz, hkv, g, d)
+    dyn_window = window is None and window_arr is not None
+    if window_arr is None:       # placeholder keeps one prefetch layout
+        window_arr = jnp.zeros((1,), jnp.int32)
     # pools laid out (NB, Hkv, BS, D) so one (block, head) tile is a
     # contiguous DMA per grid step
     planes = [p.transpose(0, 2, 1, 3) for p in (k_hi, k_lo, v_hi, v_lo)]
 
-    q_spec = pl.BlockSpec((1, 1, g, d), lambda b, hh, c, tab, ln: (b, hh, 0, 0))
+    q_spec = pl.BlockSpec((1, 1, g, d),
+                          lambda b, hh, c, tab, ln, win: (b, hh, 0, 0))
     c_spec = pl.BlockSpec((1, 1, bs_tok, d),
-                          lambda b, hh, c, tab, ln: (tab[b, c], hh, 0, 0))
-    out_spec = pl.BlockSpec((1, 1, g, d), lambda b, hh, c, tab, ln: (b, hh, 0, 0))
+                          lambda b, hh, c, tab, ln, win: (tab[b, c], hh, 0, 0))
+    out_spec = pl.BlockSpec((1, 1, g, d),
+                            lambda b, hh, c, tab, ln, win: (b, hh, 0, 0))
     out_shape = jax.ShapeDtypeStruct((bsz, hkv, g, d), jnp.float32)
     scratch = [pltpu.VMEM((g, 1), jnp.float32),
                pltpu.VMEM((g, 1), jnp.float32),
@@ -150,23 +174,26 @@ def paged_planar_decode_attention(q, k_hi, k_lo, v_hi, v_lo, tables, lens, *,
 
     if fp8:
         kernel = functools.partial(_paged_kernel_fp8, n_blocks=mb,
-                                   block_c=bs_tok, window=window)
+                                   block_c=bs_tok, window=window,
+                                   dyn_window=dyn_window)
         ins = [planes[0], planes[2]]
         in_specs = [q_spec, c_spec, c_spec]
     else:
         kernel = functools.partial(_paged_kernel_fp16, n_blocks=mb,
-                                   block_c=bs_tok, window=window)
+                                   block_c=bs_tok, window=window,
+                                   dyn_window=dyn_window)
         ins = planes
         in_specs = [q_spec, c_spec, c_spec, c_spec, c_spec]
     grid_spec = pltpu.PrefetchScalarGridSpec(
-        num_scalar_prefetch=2,
+        num_scalar_prefetch=3,
         grid=(bsz, hkv, mb),
         in_specs=in_specs,
         out_specs=out_spec,
         scratch_shapes=scratch)
     out = pl.pallas_call(kernel, grid_spec=grid_spec, out_shape=out_shape,
                          interpret=interpret)(
-        tables.astype(jnp.int32), lens.astype(jnp.int32), qg, *ins)
+        tables.astype(jnp.int32), lens.astype(jnp.int32),
+        jnp.asarray(window_arr, jnp.int32).reshape(1), qg, *ins)
     return out.reshape(bsz, h, d)
 
 

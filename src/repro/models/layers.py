@@ -34,6 +34,13 @@ class Runtime:
     dtype: Any = jnp.bfloat16    # activation dtype
     fast_accum: bool = False     # bf16 cross-shard partial sums (serving
                                  # hillclimb Z4: halves TP all-reduce bytes)
+    attn_backend: str | None = None
+    # paged-decode attention backend: "pallas" routes single-token paged
+    # decode over byte-planar (NestedKV) GQA caches through the
+    # scalar-prefetch block-table kernel (interpret-mode off-TPU);
+    # None/"ref" keeps the pure-jnp gather path. Orthogonal to `backend`
+    # (the GEMM kernel selector) so pallas attention can pair with ref
+    # matmuls on CPU.
 
     @property
     def serving(self) -> bool:
@@ -369,6 +376,30 @@ def attention(rt: Runtime, p: dict, cfg, x: jax.Array, *,
                 fl = flat(cache[name]).at[wf].set(
                     val.reshape(-1, *val.shape[2:]))
                 new_cache[name] = fl.reshape(cache[name].shape)
+            if rt.attn_backend == "pallas" and x.shape[1] == 1:
+                # single-token decode over planar blocks: hand the block
+                # table straight to the scalar-prefetch Pallas kernel —
+                # no (B, Cap) logical gather is ever materialized. The
+                # table is recovered from phys_read (= table ⊗ BS + offs)
+                # by striding; the scanned per-layer window rides as a
+                # traced (1,) operand so one executable serves a mixed
+                # local/global stack. Interpret mode off-TPU keeps the
+                # path runnable (and CI-testable) on CPU.
+                from repro.kernels.planar_decode_attention import (
+                    paged_planar_decode_attention)
+                bs_tok = cache["k_hi"].shape[1]
+                tables = phys_read[:, ::bs_tok] // bs_tok        # (B, MB)
+                wa = None
+                if window is not None:
+                    wa = jnp.reshape(jnp.asarray(window, jnp.int32), (1,))
+                o = paged_planar_decode_attention(
+                    q[:, 0], new_cache["k_hi"], new_cache["k_lo"],
+                    new_cache["v_hi"], new_cache["v_lo"], tables,
+                    _as_lens(kv_len, b), fp8=(rt.mode == "fp8"),
+                    window_arr=wa,
+                    interpret=jax.default_backend() != "tpu")[:, None]
+                o = o.reshape(b, x.shape[1], -1).astype(rt.dtype)
+                return apply_linear(rt, p["wo"], o), new_cache
             if rt.mode == "fp8":
                 kc = e5m2_view(flat(new_cache["k_hi"])[phys_read], jnp.float16)
                 vc = e5m2_view(flat(new_cache["v_hi"])[phys_read], jnp.float16)

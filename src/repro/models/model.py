@@ -742,13 +742,13 @@ def prefill(rt, params, cfg, batch, *, capacity: int | None = None,
 
 def paged_step(rt, params, cfg, tokens, caches, block_tables, *,
                q_offset, kv_len, block_size: int, logit_position=None,
-               slot=None):
+               slot=None, return_logits: bool = False):
     """One step over a descriptor-shaped paged cache — covers BOTH
-    batched decode (C=1 across all rows) and chunked prefill (one row,
-    C=chunk tokens) for every engine-served family: GQA K/V planes, MLA
-    `c_kv`+`k_rope` latent planes (absorbed attention), and hybrid/ssm
-    stacks whose paged shared-attention planes pair with slot-resident
-    SSM state.
+    batched decode (C=1 across all rows) and chunked prefill (a batch of
+    ragged right-padded chunk rows, C=chunk bucket) for every
+    engine-served family: GQA K/V planes, MLA `c_kv`+`k_rope` latent
+    planes (absorbed attention), and hybrid/ssm stacks whose paged
+    shared-attention planes pair with slot-resident SSM state.
 
     tokens:       (B, C) int32, right-padded chunks (GQA/MLA only —
                   recurrent state would absorb pads, so ssm/hybrid
@@ -773,12 +773,17 @@ def paged_step(rt, params, cfg, tokens, caches, block_tables, *,
                   families with slot-resident state: the chunk reads and
                   writes only that slot's state row (B must be 1).
                   None = caches' slot axis matches B (batched decode).
+    return_logits: False (default) fuses greedy sampling into the step
+                  and returns (next_ids (B,) int32, new caches) — the
+                  engine's one-dispatch hot path pulls B int32s back to
+                  host instead of a (B, vocab) float matrix. True is the
+                  escape hatch for tests/tools that inspect logits.
 
-    Returns (logits (B, V), new caches). Pad columns write to the trash
-    block and their outputs are never read; chunked and monolithic
-    prefill therefore produce bit-identical logits for real tokens
-    (attention families — SSD state rounding is chunk-boundary-dependent
-    for ssm/hybrid).
+    Returns (next_ids (B,) int32 | logits (B, V), new caches). Pad
+    columns write to the trash block and their outputs are never read;
+    chunked and monolithic prefill therefore produce bit-identical
+    logits for real tokens (attention families — SSD state rounding is
+    chunk-boundary-dependent for ssm/hybrid).
 
     Block tables may alias: several rows (or several sequences across
     steps) may point at the SAME physical blocks — COW prefix caching
@@ -855,7 +860,9 @@ def paged_step(rt, params, cfg, tokens, caches, block_tables, *,
         lp = jnp.asarray(logit_position, jnp.int32)
         hsel = jnp.take_along_axis(h, lp[:, None, None], axis=1)
     logits = lm_logits(rt, params, cfg, hsel)[:, 0]
-    return logits, new_caches
+    if return_logits:
+        return logits, new_caches
+    return jnp.argmax(logits, -1).astype(jnp.int32), new_caches
 
 
 def decode_step(rt, params, cfg, tokens, caches, cache_len):

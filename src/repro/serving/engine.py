@@ -63,6 +63,37 @@ Greedy sampling; attention-family chunk lengths are bucketed and jit
 caches key on (mode, bucket) with positions and slot index passed as
 traced arguments, so distinct prompt lengths share one executable per
 bucket (recurrent families compile per exact chunk length instead).
+
+One-dispatch steps (host-orchestration overhead)
+------------------------------------------------
+The per-step host work is O(1) jitted dispatches and O(changed bytes)
+host→device traffic, independent of how many sequences are prefilling
+or decoding:
+
+* ALL of a step's planned prompt chunks run as ONE batched ragged
+  `paged_step` dispatch (attention-family descriptors): chunk rows are
+  right-padded to a shared bucket, row count is bucketed to a power of
+  two, and per-row `q_offset`/`kv_len`/`logit_position` carry the
+  raggedness — executables key on (mode, rows-bucket, chunk-bucket),
+  i.e. the total-chunk bucket. Disabled pad rows (kv_len=0) write to
+  the trash block. Recurrent descriptors keep per-chunk dispatches
+  (exact-length chunks + single-slot state routing).
+* Block tables live on DEVICE (`BlockManager.device_tables()`): each
+  dispatch reads the persistent mirror, and allocate/ensure/slide/COW
+  mutations flush as one small jitted scatter instead of re-uploading
+  the (G, n_slots, MB) array every step.
+* Sampling is fused into the jitted step (`paged_step` returns argmax
+  token ids), so decode pulls (B,) int32s back — not (B, vocab) floats
+  — and the step's device results are synced ONCE at the end
+  (`_finalize_step`); no `np.asarray` on live device values mid-step.
+  A prefill that completes mid-step hands its on-device first token to
+  the same step's decode through a tiny jitted overlay, never a sync.
+* Caches are donated to every step dispatch, so XLA updates pools in
+  place rather than copying them per step.
+
+`stats` counts `prefill_dispatches`/`decode_dispatches`/
+`aux_dispatches` and `h2d_bytes`; `benchmarks/bench_kernel_overhead.py`
+turns them into the `engine_dispatch/*` rows the CI smoke asserts.
 """
 
 from __future__ import annotations
@@ -114,10 +145,16 @@ def _bucket(n: int, minimum: int = 16) -> int:
     return b
 
 
+# placeholder for a token whose value still lives on device; patched by
+# `_finalize_step`'s single end-of-step sync before anything reads it
+_PENDING = -1
+
+
 class Engine:
     def __init__(self, cfg: ArchConfig, serving_params, *, n_slots: int,
                  capacity: int, controller: DualPrecisionController | None = None,
                  forced_mode: str | None = None, backend: str = "ref",
+                 attn_backend: str = "ref",
                  kv_planar: bool = False,
                  clock: Callable[[], float] = time.monotonic,
                  block_size: int = 16,
@@ -147,9 +184,20 @@ class Engine:
         self.finished: list[Request] = []
         self.lens = np.zeros(n_slots, np.int32)
         self.stats = {"preemptions": 0, "chunks": 0, "chunk_tokens": 0,
-                      "peak_block_util": 0.0, "window_reclaimed_blocks": 0}
+                      "peak_block_util": 0.0, "window_reclaimed_blocks": 0,
+                      # one-dispatch accounting (bench_kernel_overhead
+                      # engine_dispatch/* rows): jitted calls per phase
+                      # plus host->device bytes for step inputs (block
+                      # tables are counted by BlockManager separately)
+                      "prefill_dispatches": 0, "decode_dispatches": 0,
+                      "aux_dispatches": 0, "h2d_bytes": 0}
         self._last_step_ms: float | None = None
-        self._rts = {m: Runtime(mode=m, backend=backend, dtype=jnp.float32)
+        # attn_backend="pallas" serves planar GQA decode through the
+        # block-table scalar-prefetch kernel (layers.attention "paged");
+        # anything it cannot serve falls back to the ref gather path
+        self._rts = {m: Runtime(mode=m, backend=backend, dtype=jnp.float32,
+                                attn_backend=None if attn_backend == "ref"
+                                else attn_backend)
                      for m in ("fp16", "fp8")}
         self.block_size = block_size
         mbs = -(-capacity // block_size)
@@ -209,12 +257,19 @@ class Engine:
                         if k == "ssm" else sub)
                     for k, sub in c.items()},
                 donate_argnums=(0,))
+        # batched decode: greedy sampling fused into the step (returns
+        # (n_slots,) int32 ids, not (B, vocab) logits); caches donated so
+        # pools update in place
         self._decode = {
             m: jax.jit(lambda p, c, t, tab, qo, kvl, _m=m: M.paged_step(
                 self._rts[_m], p, cfg, t, c, tab, q_offset=qo,
-                kv_len=kvl, block_size=block_size))
+                kv_len=kvl, block_size=block_size), donate_argnums=(1,))
             for m in ("fp16", "fp8")}
         self._chunk_cache: dict[tuple[str, int], Any] = {}
+        self._fused_cache: dict[tuple[str, int, int], Any] = {}
+        # scatter a completing prefill's on-device first token into the
+        # same step's decode inputs (no host sync on the seam)
+        self._overlay = jax.jit(lambda t, s, ids, r: t.at[s, 0].set(ids[r]))
         self.iteration = 0
 
     # -- public API -----------------------------------------------------------
@@ -261,18 +316,24 @@ class Engine:
 
     # -- step -----------------------------------------------------------------
     def step(self) -> None:
+        """One engine iteration: O(1) jitted dispatches regardless of how
+        many sequences are prefilling or decoding (attention families —
+        recurrent descriptors dispatch per chunk), with the step's device
+        results synced to host exactly once at the end."""
         self.iteration += 1
         t0 = self.clock()
         plan = self._plan_chunks()
         mode = self._mode(len(self.active),
                           sum(take for _, _, take in plan),
                           free_block_frac=self.blocks.free_block_frac())
-        for idx, start, take in plan:
-            # a COW-fork failure inside an earlier chunk may have
-            # preempted a later plan entry — skip stale entries
-            if idx in self.prefilling:
-                self._run_chunk(mode, idx, start, take)
-        self._decode_paged(mode)
+        # pending: (req, output index, device ids, row) patched at the
+        # end-of-step sync; fresh: (slot, device ids, row) prefills that
+        # completed this step and decode below with a device-held token
+        pending: list[tuple[Request, int, Any, int]] = []
+        fresh: list[tuple[int, Any, int]] = []
+        chunk_ids = self._run_chunks(mode, plan, pending, fresh)
+        decode_ids = self._decode_paged(mode, chunk_ids, fresh)
+        self._finalize_step(mode, pending, decode_ids)
         self._sample_peak()
         # wall time of this step feeds the controller's p90 tracker on the
         # NEXT decision (measured-latency fallback to FP8, paper §3.2)
@@ -327,6 +388,7 @@ class Engine:
                 self.slot_state.claim(idx, req.request_id, len(seq_tokens),
                                       req.max_new - len(req.output))
                 self.caches = self._zero_slot(self.caches, jnp.int32(idx))
+                self.stats["aux_dispatches"] += 1
             # longest cached full-block prefix is shared (incref, zero
             # recompute); prefill starts at the matched offset but always
             # recomputes >= 1 token so the first-token logit is produced
@@ -344,24 +406,54 @@ class Engine:
                 budget -= take
         return plan
 
+    def _h2d(self, a: np.ndarray):
+        """Host->device upload with byte accounting (engine_dispatch/*
+        bench rows report bytes per step/token)."""
+        self.stats["h2d_bytes"] += a.nbytes
+        return jnp.asarray(a)
+
     def _chunk_fn(self, mode: str, bucket: int):
-        """Single-row prefill chunk executable. For slot-resident
-        descriptors the traced `slot` routes the chunk's state
-        read/write to one state row; attention-only descriptors ignore
-        it (jit caches still key on (mode, bucket) alone)."""
+        """Single-row prefill chunk executable (recurrent descriptors —
+        attention families batch through `_fused_fn` instead). The
+        traced `slot` routes the chunk's state read/write to one state
+        row; the row's block table is sliced from the device-resident
+        (G, n_slots, MB) array by a traced slot index, so jit caches
+        still key on (mode, bucket) alone."""
         key = (mode, bucket)
         if key not in self._chunk_cache:
             rt, cfg, bs = self._rts[mode], self.cfg, self.block_size
             slotted = self.slot_state is not None
 
-            def fn(p, caches, tokens, table, q_offset, kv_len, logit_pos,
-                   slot):
+            def fn(p, caches, tokens, tables, row, q_offset, kv_len,
+                   logit_pos, slot):
+                table = jax.lax.dynamic_slice_in_dim(tables, row, 1, axis=1)
                 return M.paged_step(rt, p, cfg, tokens, caches, table,
                                     q_offset=q_offset, kv_len=kv_len,
                                     block_size=bs, logit_position=logit_pos,
                                     slot=slot if slotted else None)
-            self._chunk_cache[key] = jax.jit(fn)
+            self._chunk_cache[key] = jax.jit(fn, donate_argnums=(1,))
         return self._chunk_cache[key]
+
+    def _fused_fn(self, mode: str, rows_bucket: int, chunk_bucket: int):
+        """Batched ragged prefill executable: every planned chunk of a
+        step runs as one dispatch. Rows are independent single-sequence
+        chunks (per-row q_offset/kv_len/logit_position carry the
+        raggedness; kv_len=0 disables pad rows); each row's block table
+        is gathered from the device-resident array by a traced slot
+        vector, so the jit cache keys on (mode, rows-bucket,
+        chunk-bucket) — the total-chunk bucket — alone."""
+        key = (mode, rows_bucket, chunk_bucket)
+        if key not in self._fused_cache:
+            rt, cfg, bs = self._rts[mode], self.cfg, self.block_size
+
+            def fn(p, caches, tokens, tables, rows, q_offset, kv_len,
+                   logit_pos):
+                tab = jnp.take(tables, rows, axis=1)     # (G, R, MB)
+                return M.paged_step(rt, p, cfg, tokens, caches, tab,
+                                    q_offset=q_offset, kv_len=kv_len,
+                                    block_size=bs, logit_position=logit_pos)
+            self._fused_cache[key] = jax.jit(fn, donate_argnums=(1,))
+        return self._fused_cache[key]
 
     def _apply_cow(self, triples: list[tuple[int, int, int]]) -> None:
         """Materialize COW forks: copy each forked block's bytes — the
@@ -370,6 +462,7 @@ class Engine:
         for g, src, dst in triples:
             self.caches = self._copy_block[g](
                 self.caches, jnp.int32(src), jnp.int32(dst))
+            self.stats["aux_dispatches"] += 1
 
     def _cow_or_preempt(self, idx: int, start: int, end: int) -> bool:
         """Fork shared blocks covering the write range [start, end);
@@ -394,33 +487,108 @@ class Engine:
         self.stats["window_reclaimed_blocks"] = \
             self.blocks.window_freed_blocks
 
-    def _run_chunk(self, mode: str, idx: int, start: int, take: int) -> None:
+    def _run_chunks(self, mode: str, plan, pending, fresh):
+        """Execute this step's planned prompt chunks. Attention-family
+        descriptors fuse EVERY chunk into one batched ragged dispatch;
+        recurrent descriptors dispatch per chunk (exact-length chunks,
+        single-slot state routing). Returns the device array of sampled
+        ids for the fused batch (None otherwise); completing rows are
+        recorded in `pending`/`fresh` for the end-of-step sync."""
+        if self._pad_chunks:
+            return self._run_chunks_fused(mode, plan, pending, fresh)
+        for idx, start, take in plan:
+            # a COW-fork failure inside an earlier chunk may have
+            # preempted a later plan entry — skip stale entries
+            if idx in self.prefilling:
+                self._run_chunk(mode, idx, start, take, pending, fresh)
+        return None
+
+    def _run_chunks_fused(self, mode: str, plan, pending, fresh):
+        """ONE jitted ragged `paged_step` covers the whole chunk budget:
+        rows bucketed to a power of two, chunk lengths to the max take's
+        bucket; pad rows are disabled via kv_len=0 and pad columns are
+        masked as before, so the fused batch is bit-identical to the
+        per-chunk dispatches it replaces."""
+        entries = []
+        for idx, start, take in plan:
+            if idx not in self.prefilling:
+                continue                     # preempted by an earlier COW
+            if not self._cow_or_preempt(idx, start, start + take):
+                continue
+            entries.append((idx, start, take))
+        # a later COW fork may have preempted an earlier surviving entry
+        entries = [e for e in entries if e[0] in self.prefilling]
+        if not entries:
+            return None
+        rb = _bucket(len(entries), 1)
+        cb = _bucket(max(take for _, _, take in entries))
+        tokens = np.zeros((rb, cb), np.int32)
+        rows = np.zeros(rb, np.int32)        # pad rows alias slot 0:
+        qo = np.zeros(rb, np.int32)          # kv_len=0 masks their reads
+        kvl = np.zeros(rb, np.int32)         # and trashes their writes
+        lp = np.zeros(rb, np.int32)
+        for r, (idx, start, take) in enumerate(entries):
+            st = self.prefilling[idx]
+            tokens[r, :take] = st.seq_tokens[start: start + take]
+            rows[r] = idx
+            qo[r] = start
+            kvl[r] = start + take
+            lp[r] = take - 1
+        ids, self.caches = self._fused_fn(mode, rb, cb)(
+            self.params, self.caches, self._h2d(tokens),
+            self.blocks.device_tables(), self._h2d(rows), self._h2d(qo),
+            self._h2d(kvl), self._h2d(lp))
+        self.stats["prefill_dispatches"] += 1
+        for idx, start, take in entries:
+            self._commit_chunk(idx, start, take)
+        # sample pool pressure BEFORE _finish_chunk can retire+release
+        # blocks — prefill-heavy steps used to under-report the peak
+        self._sample_peak()
+        for r, (idx, start, take) in enumerate(entries):
+            self._finish_chunk(mode, idx, ids, r, pending, fresh)
+        return ids
+
+    def _run_chunk(self, mode: str, idx: int, start: int, take: int,
+                   pending, fresh) -> None:
+        """Recurrent-descriptor chunk: one dispatch per chunk (pads
+        would be absorbed into the SSM state, so rows cannot share a
+        bucketed batch)."""
         st = self.prefilling[idx]
         if not self._cow_or_preempt(idx, start, start + take):
             return
-        # recurrent descriptors chunk at exact length (pads would be
-        # absorbed into the SSM state); attention ones bucket + right-pad
-        bucket = _bucket(take) if self._pad_chunks else take
+        bucket = take                        # exact-length, no padding
         toks = np.zeros((1, bucket), np.int32)
         toks[0, :take] = st.seq_tokens[start: start + take]
-        logits, self.caches = self._chunk_fn(mode, bucket)(
-            self.params, self.caches, jnp.asarray(toks),
-            jnp.asarray(self.blocks.group_tables()[:, idx: idx + 1]),
-            jnp.asarray([start], np.int32),
-            jnp.asarray([start + take], np.int32),
-            jnp.asarray([take - 1], np.int32), jnp.int32(idx))
+        ids, self.caches = self._chunk_fn(mode, bucket)(
+            self.params, self.caches, self._h2d(toks),
+            self.blocks.device_tables(), jnp.int32(idx),
+            self._h2d(np.asarray([start], np.int32)),
+            self._h2d(np.asarray([start + take], np.int32)),
+            self._h2d(np.asarray([take - 1], np.int32)), jnp.int32(idx))
+        self.stats["prefill_dispatches"] += 1
+        self._commit_chunk(idx, start, take)
+        self._sample_peak()                  # pre-retire, as above
+        self._finish_chunk(mode, idx, ids, 0, pending, fresh)
+
+    def _commit_chunk(self, idx: int, start: int, take: int) -> None:
+        st = self.prefilling[idx]
         st.done = start + take
         self.blocks.commit(idx, st.done, st.seq_tokens)
         self.stats["chunks"] += 1
         self.stats["chunk_tokens"] += take
-        # sample pool pressure BEFORE _maybe_retire below can release
-        # blocks — prefill-heavy steps used to under-report the peak
-        self._sample_peak()
+
+    def _finish_chunk(self, mode: str, idx: int, ids, row: int,
+                      pending, fresh) -> None:
+        """Promote a prefill whose final chunk just ran to active. Its
+        first generated token is still ON DEVICE (`ids[row]`): the
+        output slot is patched at the end-of-step sync, and the same
+        step's decode receives it through the jitted overlay."""
+        st = self.prefilling[idx]
         if st.done < len(st.seq_tokens):
             return
-        # final chunk: the prompt's first generated token
         req = st.req
-        req.output.append(int(np.asarray(jnp.argmax(logits, -1))[0]))
+        req.output.append(_PENDING)
+        pending.append((req, len(req.output) - 1, ids, row))
         now = self.clock()
         if req.first_token_s is None:
             req.first_token_s = now
@@ -430,6 +598,8 @@ class Engine:
         self.active[idx] = req
         del self.prefilling[idx]
         self._maybe_retire(idx, now)
+        if idx in self.active:
+            fresh.append((idx, ids, row))
 
     def _preempt(self, victim: int) -> None:
         """vLLM-style recompute preemption: drop the victim's blocks and
@@ -459,7 +629,11 @@ class Engine:
                 self.slot_state.release(idx)
             self.lens[idx] = 0
 
-    def _decode_paged(self, mode: str) -> None:
+    def _decode_paged(self, mode: str, chunk_ids, fresh):
+        """Dispatch the batched decode; returns the device array of
+        sampled ids (None when nothing is active). Host bookkeeping for
+        the decoded tokens happens in `_finalize_step` after the single
+        end-of-step sync."""
         # grow each active row's block table to cover the incoming write
         # at position lens[idx] and COW-fork it if shared; preempt
         # youngest sequences on exhaustion
@@ -477,19 +651,49 @@ class Engine:
                 self._preempt(victim)
         self._sample_peak()                  # allocation peak, pre-retire
         if not self.active:
-            return
+            return None
         tokens = np.zeros((self.n_slots, 1), np.int32)
         q_off = np.zeros(self.n_slots, np.int32)
         kvl = np.zeros(self.n_slots, np.int32)   # 0 disables inactive rows
         for idx, req in self.active.items():
-            tokens[idx, 0] = req.output[-1]
+            if req.output[-1] != _PENDING:
+                tokens[idx, 0] = req.output[-1]
             q_off[idx] = self.lens[idx]
             kvl[idx] = self.lens[idx] + 1
-        logits, self.caches = self._decode[mode](
-            self.params, self.caches, jnp.asarray(tokens),
-            jnp.asarray(self.blocks.group_tables()), jnp.asarray(q_off),
-            jnp.asarray(kvl))
-        nxt = np.asarray(jnp.argmax(logits, -1))
+        toks = self._h2d(tokens)
+        fresh = [(s, a, r) for s, a, r in fresh if s in self.active]
+        if fresh and chunk_ids is not None:
+            # fused path: every completing prefill's first token lives in
+            # ONE device array — overlay them all with a single jitted
+            # scatter instead of syncing mid-step
+            slots = np.asarray([s for s, _, _ in fresh], np.int32)
+            rows = np.asarray([r for _, _, r in fresh], np.int32)
+            toks = self._overlay(toks, self._h2d(slots), chunk_ids,
+                                 self._h2d(rows))
+            self.stats["aux_dispatches"] += 1
+        elif fresh:
+            # recurrent path: per-chunk ids arrays, one overlay each
+            for s, a, r in fresh:
+                toks = self._overlay(
+                    toks, self._h2d(np.asarray([s], np.int32)), a,
+                    self._h2d(np.asarray([r], np.int32)))
+                self.stats["aux_dispatches"] += 1
+        ids, self.caches = self._decode[mode](
+            self.params, self.caches, toks, self.blocks.device_tables(),
+            self._h2d(q_off), self._h2d(kvl))
+        self.stats["decode_dispatches"] += 1
+        return ids
+
+    def _finalize_step(self, mode: str, pending, decode_ids) -> None:
+        """The step's ONLY device->host sync: pull the sampled token ids
+        (a few int32s, not logits), patch pending prefill outputs, then
+        run decode bookkeeping — commit() must hash REAL token values,
+        so it happens strictly after the patch."""
+        nxt = None if decode_ids is None else np.asarray(decode_ids)
+        for req, pos, ids, row in pending:
+            req.output[pos] = int(np.asarray(ids)[row])
+        if nxt is None:
+            return
         now = self.clock()
         for idx, req in list(self.active.items()):
             self.lens[idx] += 1

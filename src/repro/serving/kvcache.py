@@ -95,13 +95,32 @@ requires the global groups' full [0, m) chain AND, per windowed group,
 only the cached blocks covering the resume position's lookback window
 [q0 - window + 1, m*bs) — freshly attached sequences therefore start
 with their local groups already slid to that point.
+
+Device-resident block tables (`device_tables`)
+----------------------------------------------
+The engine dispatches one jitted step per iteration; re-uploading the
+whole (G, n_slots, MB) table array from host every step would put an
+O(table) host→device transfer on the per-step critical path even though
+a typical step changes only a handful of entries (one `ensure` append
+per growing row, the odd COW fork or window slide). `BlockManager`
+therefore keeps a DEVICE mirror of the host table array: every table
+mutation is recorded in a dirty set, and `device_tables()` flushes the
+accumulated (group, slot, j) -> block updates with ONE small jitted
+scatter (update count bucketed to a power of two so the scatter
+executable is reused; the old device buffer is donated so the update is
+in place, never a pool-sized copy). Steady-state decode uploads a few
+dozen bytes per step instead of the full table. The host array stays
+the source of truth for all allocator logic and tests.
 """
 
 from __future__ import annotations
 
 import collections
 import dataclasses
+import functools
 
+import jax
+import jax.numpy as jnp
 import numpy as np
 
 
@@ -269,6 +288,17 @@ class SlotManager:
 TRASH_BLOCK = 0
 
 
+@functools.partial(jax.jit, donate_argnums=(0,))
+def _table_scatter(tables, idx, val):
+    """Apply K incremental (group, slot, j) -> block updates to the
+    device table mirror in place (donated)."""
+    return tables.at[idx[:, 0], idx[:, 1], idx[:, 2]].set(val)
+
+
+def _pow2(n: int) -> int:
+    return 1 << max(0, n - 1).bit_length()
+
+
 def _chain_hash(parent: int, tokens: tuple[int, ...]) -> int:
     return hash((parent, tokens))
 
@@ -353,6 +383,13 @@ class BlockManager:
         # per-group unreferenced-but-cached blocks, least recent first
         self._tables = np.full((self.n_groups, n_slots, max_blocks_per_seq),
                                TRASH_BLOCK, np.int32)
+        # device mirror of _tables: created on first device_tables() call,
+        # then maintained by small jitted scatters of the dirty set
+        self._dev_tables = None
+        self._dirty: dict[tuple[int, int, int], int] = {}
+        self.table_h2d_bytes = 0         # bytes shipped host->device
+        self.table_flushes = 0           # incremental scatter dispatches
+        self.table_updates = 0           # table entries actually flushed
         self.prefix_stats = {"queries": 0, "lookup_tokens": 0,
                              "hit_tokens": 0, "blocks_shared": 0,
                              "cow_forks": 0, "evictions": 0}
@@ -425,6 +462,47 @@ class BlockManager:
         incrementally (do not mutate). `paged_step` gathers each
         layer's KV through its group's table."""
         return self._tables
+
+    def _set_table(self, g: int, idx: int, j: int, b: int) -> None:
+        """Single point of mutation for table entries: updates the host
+        array and records the entry in the device mirror's dirty set."""
+        if self._tables[g, idx, j] != b:
+            self._tables[g, idx, j] = b
+            if self._dev_tables is not None:
+                self._dirty[(g, idx, j)] = int(b)
+
+    def device_tables(self):
+        """(n_groups, n_slots, max_blocks_per_seq) int32 DEVICE-resident
+        table array. The first call uploads the full host array; every
+        later call flushes only the entries mutated since the previous
+        flush, as one jitted scatter whose update count is bucketed to a
+        power of two (padding repeats the last update, which is
+        idempotent) so a handful of executables serve every step. The
+        returned array is the engine's per-step `block_tables` argument
+        — identical in content to `group_tables()`, with h2d traffic
+        proportional to the CHANGE, not the table."""
+        if self._dev_tables is None:
+            self._dev_tables = jnp.asarray(self._tables)
+            self.table_h2d_bytes += self._tables.nbytes
+            self.table_flushes += 1
+            return self._dev_tables
+        if self._dirty:
+            k = len(self._dirty)
+            kb = _pow2(k)
+            idx = np.empty((kb, 3), np.int32)
+            val = np.empty((kb,), np.int32)
+            for i, ((g, s, j), b) in enumerate(self._dirty.items()):
+                idx[i] = (g, s, j)
+                val[i] = b
+            idx[k:] = idx[k - 1]
+            val[k:] = val[k - 1]
+            self._dev_tables = _table_scatter(
+                self._dev_tables, jnp.asarray(idx), jnp.asarray(val))
+            self.table_h2d_bytes += idx.nbytes + val.nbytes
+            self.table_flushes += 1
+            self.table_updates += k
+            self._dirty.clear()
+        return self._dev_tables
 
     # -- allocation core -------------------------------------------------------
     def _alloc_block(self, g: int) -> int | None:
@@ -535,7 +613,7 @@ class BlockManager:
                     self._free[gi].append(b)
                     freed += 1
                 g.blocks[j] = TRASH_BLOCK
-                self._tables[gi, idx, j] = TRASH_BLOCK
+                self._set_table(gi, idx, j, TRASH_BLOCK)
             g.slid = max(g.slid, sp)
         self.window_freed_blocks += freed
         return freed
@@ -561,7 +639,7 @@ class BlockManager:
                 b = self._alloc_block(gi)
                 assert b is not None      # guarded by free_blocks above
                 self._ref[gi][b] = 1
-                self._tables[gi, idx, len(g.blocks)] = b
+                self._set_table(gi, idx, len(g.blocks), b)
                 g.blocks.append(b)
         return True
 
@@ -602,7 +680,11 @@ class BlockManager:
             for b in reversed(g.blocks):
                 if b != TRASH_BLOCK:
                     self._release_block(gi, b)
-        self._tables[:, idx, :] = TRASH_BLOCK
+            # entries beyond len(g.blocks) and below the slide point are
+            # already trash by invariant
+            for j, b in enumerate(g.blocks):
+                if b != TRASH_BLOCK:
+                    self._set_table(gi, idx, j, TRASH_BLOCK)
         self.seqs[idx] = None
 
     def youngest(self) -> int | None:
@@ -714,7 +796,7 @@ class BlockManager:
                 if self._ref[gi][b] == 0:
                     del self._lru[gi][b]
                 self._ref[gi][b] += 1
-                self._tables[gi, idx, j] = b
+                self._set_table(gi, idx, j, b)
             shared += len(blks)
         seq.length = m_tokens
         st = self.prefix_stats
@@ -758,7 +840,7 @@ class BlockManager:
                 self._ref[gi][dst] = 1
                 self._release_block(gi, src)
                 g.blocks[bi] = dst
-                self._tables[gi, idx, bi] = dst
+                self._set_table(gi, idx, bi, dst)
                 triples.append((gi, src, dst))
                 self.prefix_stats["cow_forks"] += 1
         return triples
@@ -831,3 +913,12 @@ class BlockManager:
                     "live block below the slide point"
                 assert all(b != TRASH_BLOCK for b in g.blocks[g.slid:]), \
                     "hole above the slide point"
+        if self._dev_tables is not None:
+            # read-only check: overlay the pending dirty entries on the
+            # mirror instead of flushing (device_tables() would mutate
+            # the very h2d counters the bench rows report)
+            mirror = np.asarray(self._dev_tables).copy()
+            for (g, s, j), b in self._dirty.items():
+                mirror[g, s, j] = b
+            assert (mirror == self._tables).all(), \
+                "device table mirror diverged from the host tables"

@@ -150,7 +150,8 @@ class TestChunkedPrefill:
                     q_offset=jnp.asarray([start], jnp.int32),
                     kv_len=jnp.asarray([start + take], jnp.int32),
                     block_size=bs,
-                    logit_position=jnp.asarray([take - 1], jnp.int32))
+                    logit_position=jnp.asarray([take - 1], jnp.int32),
+                    return_logits=True)
                 start += take
             assert start == plen
             return np.asarray(out)
@@ -680,7 +681,8 @@ class TestMLAPagedServing:
                     q_offset=jnp.asarray([start], jnp.int32),
                     kv_len=jnp.asarray([start + take], jnp.int32),
                     block_size=bs,
-                    logit_position=jnp.asarray([take - 1], jnp.int32))
+                    logit_position=jnp.asarray([take - 1], jnp.int32),
+                    return_logits=True)
                 start += take
             assert start == plen
             return np.asarray(out)
@@ -844,7 +846,8 @@ class TestSlidingWindowPagedServing:
                     q_offset=jnp.asarray([start], jnp.int32),
                     kv_len=jnp.asarray([start + take], jnp.int32),
                     block_size=bs,
-                    logit_position=jnp.asarray([take - 1], jnp.int32))
+                    logit_position=jnp.asarray([take - 1], jnp.int32),
+                    return_logits=True)
                 start += take
             assert start == plen
             return np.asarray(out)

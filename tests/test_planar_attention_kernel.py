@@ -128,6 +128,93 @@ def test_windowed_dense_planar_matches_reference():
                                rtol=2e-3, atol=2e-3)
 
 
+@pytest.mark.parametrize("fp8", [False, True])
+def test_traced_window_bit_equals_static_window(fp8):
+    """The engine's scanned decoder stack passes the per-layer window as
+    a TRACED (1,) operand (`window_arr`); its mask arithmetic must be
+    bit-identical to the static `window=` kwarg at every boundary —
+    len == window, window +- 1, a window crossing a physical block edge
+    — and window_arr <= 0 must be bit-identical to no window at all."""
+    b, h, hkv, d = 4, 8, 4, 64
+    bs, mb, window = 16, 4, 24
+    rng = np.random.RandomState(29)
+    q = jnp.asarray(rng.randn(b, h, d).astype(np.float16))
+    _, _, tables, pk, pv = _shuffled_pool(rng, b, 64, hkv, d, bs, mb)
+    lens = jnp.asarray([window, window - 1, window + 1, 40], jnp.int32)
+    k_hi, k_lo = nf.split_bytes(pk)
+    v_hi, v_lo = nf.split_bytes(pv)
+    static = paged_planar_decode_attention(
+        q, k_hi, k_lo, v_hi, v_lo, tables, lens, fp8=fp8, window=window,
+        interpret=True)
+    traced = paged_planar_decode_attention(
+        q, k_hi, k_lo, v_hi, v_lo, tables, lens, fp8=fp8,
+        window_arr=jnp.asarray([window], jnp.int32), interpret=True)
+    assert (np.asarray(static) == np.asarray(traced)).all()
+    glob = paged_planar_decode_attention(
+        q, k_hi, k_lo, v_hi, v_lo, tables, lens, fp8=fp8, interpret=True)
+    disabled = paged_planar_decode_attention(
+        q, k_hi, k_lo, v_hi, v_lo, tables, lens, fp8=fp8,
+        window_arr=jnp.asarray([0], jnp.int32), interpret=True)
+    assert (np.asarray(glob) == np.asarray(disabled)).all()
+    assert np.abs(np.asarray(static) - np.asarray(glob)).max() > 1e-4
+
+
+def test_paged_bit_equals_dense_on_identity_layout():
+    """Plane-rejoin exactness: with an identity block layout and the
+    dense kernel's cache block == the paged block size, both kernels
+    run the SAME online-softmax grid over the SAME f16 bytes, so the
+    paged gather through scalar-prefetch tables must be BIT-exact vs
+    the dense-slot kernel — in fp16 (both planes rejoined) and fp8
+    (hi-plane truncation only)."""
+    b, h, hkv, d, bs, mb = 2, 8, 4, 64, 128, 4
+    cap = bs * mb
+    rng = np.random.RandomState(31)
+    q = jnp.asarray(rng.randn(b, h, d).astype(np.float16))
+    k = jnp.asarray(rng.randn(b, cap, hkv, d).astype(np.float16))
+    v = jnp.asarray(rng.randn(b, cap, hkv, d).astype(np.float16))
+    lens = jnp.asarray([cap - 3, 77], jnp.int32)
+    # identity layout: row r's logical block m lives at pool id 1+r*mb+m
+    pool_k = jnp.concatenate(
+        [jnp.zeros((1, bs, hkv, d), jnp.float16),
+         k.reshape(b * mb, bs, hkv, d)])
+    pool_v = jnp.concatenate(
+        [jnp.zeros((1, bs, hkv, d), jnp.float16),
+         v.reshape(b * mb, bs, hkv, d)])
+    tables = jnp.asarray(1 + np.arange(b * mb).reshape(b, mb), jnp.int32)
+    for fp8 in (False, True):
+        dk_hi, dk_lo = nf.split_bytes(k)
+        dv_hi, dv_lo = nf.split_bytes(v)
+        dense = planar_decode_attention(q, dk_hi, dk_lo, dv_hi, dv_lo,
+                                        lens, fp8=fp8, block_c=bs,
+                                        interpret=True)
+        pk_hi, pk_lo = nf.split_bytes(pool_k)
+        pv_hi, pv_lo = nf.split_bytes(pool_v)
+        paged = paged_planar_decode_attention(q, pk_hi, pk_lo, pv_hi,
+                                              pv_lo, tables, lens,
+                                              fp8=fp8, interpret=True)
+        assert (np.asarray(dense) == np.asarray(paged)).all(), \
+            f"paged != dense bitwise (fp8={fp8})"
+
+
+def test_windowed_traced_boundary_matches_reference():
+    """Traced-window kernel vs the dense `_causal_window_mask` oracle at
+    the same boundary positions the static-window sweep covers."""
+    b, h, hkv, d = 4, 8, 4, 64
+    bs, mb, window = 16, 4, 24
+    rng = np.random.RandomState(37)
+    q = jnp.asarray(rng.randn(b, h, d).astype(np.float16))
+    k, v, tables, pk, pv = _shuffled_pool(rng, b, bs * mb, hkv, d, bs, mb)
+    lens = jnp.asarray([window, window - 1, window + 1, 40], jnp.int32)
+    k_hi, k_lo = nf.split_bytes(pk)
+    v_hi, v_lo = nf.split_bytes(pv)
+    got = paged_planar_decode_attention(
+        q, k_hi, k_lo, v_hi, v_lo, tables, lens,
+        window_arr=jnp.asarray([window], jnp.int32), interpret=True)
+    want = attn_core_decode(q[:, None], k, v, lens, window=window)[:, 0]
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=2e-3, atol=2e-3)
+
+
 def test_length_one_and_full(shape=(2, 4, 4, 64, 256)):
     b, h, hkv, d, cap = shape
     q, k, v, _ = _setup(b, h, hkv, d, cap)
