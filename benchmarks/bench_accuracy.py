@@ -67,17 +67,23 @@ def model_level(steps: int = 40) -> list[dict]:
     eval_batches = list(SyntheticLM(
         cfg, DataConfig(seq_len=64, global_batch=8, seed=999)).batches(4))
 
+    # nfp: hot-path
     def eval_loss(p, rt):
-        tot = 0.0
+        # accumulate ON DEVICE: the old per-batch float(...) forced a
+        # host sync after every dispatch, serializing the eval loop
+        # (repro-lint NFP001); callers scalarize the mean once
+        tot = jnp.zeros((), jnp.float32)
         for batch in eval_batches:
             b = {k: jnp.asarray(v) for k, v in batch.items()}
-            tot += float(M.train_loss(rt, p, cfg, b)[0])
+            tot = tot + M.train_loss(rt, p, cfg, b)[0]
         return tot / len(eval_batches)
 
-    f16 = eval_loss(params, Runtime(mode="train", dtype=jnp.float32))
+    f16 = float(eval_loss(params, Runtime(mode="train", dtype=jnp.float32)))
     sp = to_serving(params)
-    n16 = eval_loss(sp, Runtime(mode="fp16", backend="ref", dtype=jnp.float32))
-    n8 = eval_loss(sp, Runtime(mode="fp8", backend="ref", dtype=jnp.float32))
+    n16 = float(eval_loss(sp, Runtime(mode="fp16", backend="ref",
+                                      dtype=jnp.float32)))
+    n8 = float(eval_loss(sp, Runtime(mode="fp8", backend="ref",
+                                     dtype=jnp.float32)))
 
     # baseline FP8(B): per-channel weight quant materialized, plain matmul
     def quantize_tree(tree):
@@ -88,8 +94,8 @@ def model_level(steps: int = 40) -> list[dict]:
             return p
         return jax.tree.map(q, tree)
 
-    b8 = eval_loss(quantize_tree(params),
-                   Runtime(mode="train", dtype=jnp.float32))
+    b8 = float(eval_loss(quantize_tree(params),
+                         Runtime(mode="train", dtype=jnp.float32)))
     return [{"name": "accuracy/eval_ce",
              "fp16": round(f16, 4), "nested_fp16": round(n16, 4),
              "fp8_baseline": round(b8, 4), "nested_fp8": round(n8, 4),

@@ -1,0 +1,45 @@
+"""`repro-lint`: AST-based static analysis for the engine's hot-path
+discipline.
+
+PR 5 made the serving hot path fast by *convention*: O(1) jitted
+dispatches per step, one end-of-step host sync, donated cache buffers,
+pow2-bucketed jit cache keys. This package turns those conventions into
+machine-checked rules over the repo's ASTs — no imports, no tracing,
+stdlib-only (`ast`), so the lint lane runs in milliseconds without JAX.
+
+Rules (see README.md for the full catalog):
+
+* NFP001  host sync reachable from a hot root outside the declared
+          sync point
+* NFP002  read of a buffer after it was donated to a jitted callable
+* NFP003  jit-wrapper cache keyed on a raw integer not derived from a
+          pow2/bucket helper
+* NFP004  pallas_call BlockSpec/grid hygiene (index-map arity,
+          divisibility asserts, interpret fallback)
+* NFP005  Python control flow on traced values inside jitted bodies
+
+Inline directives (comments):
+
+* ``# nfp: ignore[NFP001] <reason>``  suppress a finding on this line
+  (or the next line when the directive stands alone); the reason is
+  mandatory
+* ``# nfp: hot-path``    on/above a ``def``: treat it as an NFP001 root
+* ``# nfp: sync-point``  on/above a ``def``: the function IS the
+  declared host sync; NFP001 skips its body
+"""
+
+from repro.analysis.astutil import Directive, Module, load_module
+from repro.analysis.callgraph import CallGraph, FuncInfo
+from repro.analysis.rules import Finding
+
+__all__ = ["Directive", "Module", "load_module", "CallGraph", "FuncInfo",
+           "Finding", "run_analysis", "main"]
+
+
+def __getattr__(name):
+    # lazy: importing .cli here would pre-load it into sys.modules and
+    # make `python -m repro.analysis.cli` warn under runpy
+    if name in ("main", "run_analysis"):
+        from repro.analysis import cli
+        return getattr(cli, name)
+    raise AttributeError(name)

@@ -1,0 +1,262 @@
+"""NFP004 (pallas_call hygiene) and NFP005 (traced control flow).
+
+Both rules guard trace-time failure modes that only surface on the
+backend you are NOT developing on: a BlockSpec index-map whose arity
+drifts from the grid fails at lowering on TPU but may pass in
+interpret mode; Python `if`/`while`/`assert` on a traced value raises
+`TracerBoolConversionError` only once the enclosing jit actually
+traces that path.
+"""
+
+from __future__ import annotations
+
+import ast
+
+from repro.analysis.astutil import Module, resolve_call_target, unparse_short
+from repro.analysis.callgraph import CallGraph, FuncDef, FuncInfo
+from repro.analysis.rules import Finding, _body_nodes, _device_names, _is_jit_call
+
+_PALLAS_CALL = "jax.experimental.pallas.pallas_call"
+_PREFETCH = "PrefetchScalarGridSpec"
+
+
+def _kwarg(call: ast.Call, name: str) -> ast.AST | None:
+    for kw in call.keywords:
+        if kw.arg == name:
+            return kw.value
+    return None
+
+
+def _local_env(fn: FuncDef) -> dict[str, ast.AST]:
+    """name -> RHS for single-target Name assignments (last wins)."""
+    env: dict[str, ast.AST] = {}
+    for node in _body_nodes(fn):
+        if isinstance(node, ast.Assign) and len(node.targets) == 1 \
+                and isinstance(node.targets[0], ast.Name):
+            env[node.targets[0].id] = node.value
+    return env
+
+
+def _deref(expr: ast.AST | None, env: dict[str, ast.AST],
+           depth: int = 3) -> ast.AST | None:
+    while depth and isinstance(expr, ast.Name) and expr.id in env:
+        expr = env[expr.id]
+        depth -= 1
+    return expr
+
+
+def _is_ceil_div(expr: ast.AST) -> bool:
+    """`-(-a // b)` ceil-division over-covers instead of truncating."""
+    return (isinstance(expr, ast.UnaryOp) and isinstance(expr.op, ast.USub)
+            and isinstance(expr.operand, ast.BinOp)
+            and isinstance(expr.operand.op, ast.FloorDiv))
+
+
+class PallasBlockSpecRule:
+    """NFP004: every `pl.pallas_call` must (a) give each BlockSpec
+    index-map exactly grid-arity (+ num_scalar_prefetch) parameters,
+    (b) back floor-divided grid sizes with a divisibility assert (a
+    truncated tail silently drops data), and (c) thread an `interpret=`
+    fallback so the kernel runs off-TPU — hardcoding it True/False
+    either never exercises the compiled path or cannot run in CI."""
+    rule = "NFP004"
+
+    def __init__(self, graph: CallGraph):
+        self.graph = graph
+
+    def run(self) -> list[Finding]:
+        out: list[Finding] = []
+        for qual in sorted(self.graph.funcs):
+            fi = self.graph.funcs[qual]
+            for node in _body_nodes(fi.node):
+                if isinstance(node, ast.Call) \
+                        and resolve_call_target(node, fi.module) == _PALLAS_CALL:
+                    out.extend(self._check(node, fi))
+        return out
+
+    def _check(self, call: ast.Call, fi: FuncInfo) -> list[Finding]:
+        mod, env = fi.module, _local_env(fi.node)
+        out: list[Finding] = []
+
+        def flag(node: ast.AST, msg: str) -> None:
+            out.append(Finding(self.rule, mod.rel, node.lineno,
+                               node.col_offset, msg, fi.qualname))
+
+        grid_expr, extra = _kwarg(call, "grid"), 0
+        in_specs, out_specs = _kwarg(call, "in_specs"), _kwarg(call, "out_specs")
+        gs = _deref(_kwarg(call, "grid_spec"), env)
+        if isinstance(gs, ast.Call) \
+                and (resolve_call_target(gs, mod) or "").endswith(_PREFETCH):
+            grid_expr = _kwarg(gs, "grid")
+            nsp = _deref(_kwarg(gs, "num_scalar_prefetch"), env)
+            if isinstance(nsp, ast.Constant) and isinstance(nsp.value, int):
+                extra = nsp.value
+            in_specs, out_specs = _kwarg(gs, "in_specs"), _kwarg(gs, "out_specs")
+
+        grid = _deref(grid_expr, env)
+        arity = len(grid.elts) if isinstance(grid, ast.Tuple) else None
+
+        # (a) index-map arity
+        if arity is not None:
+            for spec in self._blockspecs(in_specs, env, mod) \
+                    + self._blockspecs(out_specs, env, mod):
+                imap = spec.args[1] if len(spec.args) > 1 \
+                    else _kwarg(spec, "index_map")
+                if isinstance(imap, ast.Lambda):
+                    n = len(imap.args.args)
+                    if n != arity + extra:
+                        flag(spec, f"BlockSpec index-map takes {n} args but "
+                                   f"the grid has {arity} dims"
+                                   + (f" + {extra} scalar-prefetch operands"
+                                      if extra else "")
+                                   + f" (expected {arity + extra})")
+
+        # (b) floor-divided grid sizes need a divisibility assert
+        if isinstance(grid, ast.Tuple):
+            for elt in grid.elts:
+                d = _deref(elt, env)
+                if isinstance(d, ast.BinOp) and isinstance(d.op, ast.FloorDiv) \
+                        and not self._has_divisibility_assert(fi.node, d):
+                    flag(elt, f"grid size `{unparse_short(d)}` floor-divides "
+                              f"without an `x % y == 0` assert — a non-"
+                              f"divisible tail is silently dropped")
+                elif _is_ceil_div(d) or d is None:
+                    continue
+
+        # (c) interpret fallback
+        interp = _kwarg(call, "interpret")
+        if interp is None:
+            flag(call, "pallas_call without an `interpret=` fallback — the "
+                       "kernel cannot run (or be CI-tested) off-TPU")
+        elif isinstance(interp, ast.Constant):
+            flag(interp, f"pallas_call hardcodes interpret={interp.value!r}; "
+                         f"gate it on the platform or a caller flag")
+        return out
+
+    def _blockspecs(self, specs: ast.AST | None, env: dict[str, ast.AST],
+                    mod: Module) -> list[ast.Call]:
+        specs = _deref(specs, env)
+        if specs is None:
+            return []
+        elts = specs.elts if isinstance(specs, (ast.List, ast.Tuple)) \
+            else [specs]
+        out = []
+        for e in elts:
+            e = _deref(e, env)
+            if isinstance(e, ast.Call) \
+                    and (resolve_call_target(e, mod) or "").endswith("BlockSpec"):
+                out.append(e)
+        return out
+
+    def _has_divisibility_assert(self, fn: FuncDef, div: ast.BinOp) -> bool:
+        want_l, want_r = ast.unparse(div.left), ast.unparse(div.right)
+        for node in _body_nodes(fn):
+            if not isinstance(node, ast.Assert):
+                continue
+            for sub in ast.walk(node.test):
+                if isinstance(sub, ast.BinOp) and isinstance(sub.op, ast.Mod) \
+                        and ast.unparse(sub.left) == want_l \
+                        and ast.unparse(sub.right) == want_r:
+                    return True
+        return False
+
+
+class TracedControlFlowRule:
+    """NFP005: inside a jitted (or pallas-kernel) body, Python
+    `if`/`while`/`assert` on a value produced by a jnp/jax op forces the
+    tracer through `bool()` — `TracerBoolConversionError` at trace
+    time, or, for `assert` under `python -O`, silent no-op. Static
+    control flow on configs/strings is fine and is not flagged."""
+    rule = "NFP005"
+
+    def __init__(self, graph: CallGraph):
+        self.graph = graph
+        self.jitted = self._jitted_closure()
+
+    def _seeds(self) -> set[str]:
+        seeds: set[str] = set()
+        for qual, fi in self.graph.funcs.items():
+            for dec in fi.node.decorator_list:
+                src = unparse_short(dec, limit=120)
+                # @jax.jit / @jit / @partial(jax.jit, ...) / @jax.jit(...)
+                if "jit" in src.split("(")[0] or \
+                        (src.startswith(("functools.partial(", "partial("))
+                         and ".jit" in src):
+                    seeds.add(qual)
+        # functions passed by name to jax.jit(...) / pl.pallas_call(...)
+        for qual, fi in self.graph.funcs.items():
+            for node in ast.walk(fi.node):
+                if not isinstance(node, ast.Call) or not node.args:
+                    continue
+                tgt = resolve_call_target(node, fi.module) or ""
+                if not (_is_jit_call(node, fi.module) or tgt == _PALLAS_CALL
+                        or tgt.endswith("partial")):
+                    continue
+                for a in node.args:
+                    if isinstance(a, ast.Name):
+                        seeds.update(c.qualname for c in
+                                     self.graph.by_name.get(a.id, ())
+                                     if c.module is fi.module)
+        return seeds
+
+    def _jitted_closure(self) -> set[str]:
+        return self.graph.reachable(self._seeds())
+
+    def run(self) -> list[Finding]:
+        out: list[Finding] = []
+        for qual in sorted(self.jitted):
+            fi = self.graph.funcs[qual]
+            out.extend(self._scan(fi))
+        return out
+
+    def _scan(self, fi: FuncInfo) -> list[Finding]:
+        mod = fi.module
+        device = _device_names(fi.node, mod)
+        out: list[Finding] = []
+        for node in _body_nodes(fi.node):
+            if isinstance(node, (ast.If, ast.While)):
+                test, kind = node.test, type(node).__name__.lower()
+            elif isinstance(node, ast.Assert):
+                test, kind = node.test, "assert"
+            else:
+                continue
+            why = self._traced_reason(test, mod, device)
+            if why:
+                out.append(Finding(
+                    self.rule, mod.rel, node.lineno, node.col_offset,
+                    f"`{kind}` on traced value inside a jitted body "
+                    f"({why}) — use jnp.where/lax.cond or hoist the check "
+                    f"out of the traced region", fi.qualname))
+        return out
+
+    _STATIC_ATTRS = {"shape", "ndim", "dtype", "size", "nbytes"}
+    _STATIC_CMP = (ast.Is, ast.IsNot, ast.In, ast.NotIn)
+
+    def _traced_reason(self, test: ast.AST, mod: Module,
+                       device: set[str]) -> str | None:
+        """A test is traced when it reads the VALUE of a jnp/jax result.
+        Shape/dtype attributes, `is (not) None`, and key-membership
+        checks are static even on traced operands and stay legal."""
+
+        def scan(node: ast.AST, exempt: bool) -> str | None:
+            if isinstance(node, ast.Attribute) \
+                    and node.attr in self._STATIC_ATTRS:
+                return scan(node.value, True)
+            if isinstance(node, ast.Compare) \
+                    and all(isinstance(op, self._STATIC_CMP)
+                            for op in node.ops):
+                exempt = True
+            if isinstance(node, ast.Call) and not exempt:
+                tgt = resolve_call_target(node, mod) or ""
+                if tgt.startswith(("jax.numpy.", "jax.lax.", "jax.nn.")):
+                    return f"`{unparse_short(node)}` is traced"
+            if isinstance(node, ast.Name) and not exempt \
+                    and node.id in device:
+                return f"`{node.id}` was produced by a jnp/jax op"
+            for child in ast.iter_child_nodes(node):
+                why = scan(child, exempt)
+                if why:
+                    return why
+            return None
+
+        return scan(test, False)

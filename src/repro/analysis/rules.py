@@ -1,0 +1,598 @@
+"""NFP001–NFP003: hot-path host syncs, use-after-donation, jit keys.
+
+All three rules are syntactic over-approximations tuned to THIS
+codebase's discipline (engine.py's one-dispatch docstring): they cannot
+prove a value lives on device, so they flag the patterns that are only
+correct when it doesn't, and the `# nfp: ignore[...]` / baseline
+mechanisms record the audited exceptions.
+"""
+
+from __future__ import annotations
+
+import ast
+import dataclasses
+import hashlib
+
+from repro.analysis.astutil import (Module, dotted_path, literal_int_tuple,
+                                    resolve_call_target, unparse_short)
+from repro.analysis.callgraph import CallGraph, FuncDef, FuncInfo
+
+
+@dataclasses.dataclass
+class Finding:
+    rule: str
+    path: str                  # repo-relative
+    line: int
+    col: int
+    message: str
+    symbol: str                # enclosing function qualname (or "<module>")
+    suppressed: bool = False
+    suppress_reason: str = ""
+    baselined: bool = False
+
+    @property
+    def active(self) -> bool:
+        return not (self.suppressed or self.baselined)
+
+    def key(self) -> str:
+        """Line-independent identity for the baseline file: a finding
+        keeps its key when unrelated edits shift it up or down."""
+        raw = f"{self.rule}|{self.path}|{self.symbol}|{self.message}"
+        return hashlib.sha1(raw.encode()).hexdigest()[:16]
+
+    def to_dict(self) -> dict:
+        return {"rule": self.rule, "path": self.path, "line": self.line,
+                "col": self.col, "symbol": self.symbol,
+                "message": self.message, "key": self.key(),
+                "suppressed": self.suppressed,
+                "suppress_reason": self.suppress_reason,
+                "baselined": self.baselined}
+
+
+def _body_nodes(fn: FuncDef):
+    """Walk a function body without descending into nested defs (they
+    are separate call-graph nodes) — lambdas ARE descended (they belong
+    to the enclosing function)."""
+    stack = list(fn.body)
+    while stack:
+        node = stack.pop()
+        yield node
+        if isinstance(node, FuncDef) or isinstance(node, ast.ClassDef):
+            continue
+        stack.extend(ast.iter_child_nodes(node))
+
+
+def _device_names(fn: FuncDef, mod: Module) -> set[str]:
+    """Local names assigned from a jax/jnp call in this function —
+    proxies for 'this value lives on device'."""
+    out: set[str] = set()
+    for node in _body_nodes(fn):
+        if not isinstance(node, ast.Assign):
+            continue
+        val = node.value
+        if not isinstance(val, ast.Call):
+            continue
+        tgt = resolve_call_target(val, mod) or ""
+        if tgt.startswith(("jax.", "jax.numpy.")):
+            for t in node.targets:
+                elts = t.elts if isinstance(t, ast.Tuple) else [t]
+                for e in elts:
+                    if isinstance(e, ast.Name):
+                        out.add(e.id)
+    return out
+
+
+# =============================================================================
+# NFP001: host sync reachable from a hot root
+# =============================================================================
+
+_SYNC_ATTRS = {"item", "tolist", "block_until_ready"}
+_HOST_SAFE = (ast.Constant, ast.List, ast.Tuple, ast.Dict, ast.ListComp,
+              ast.GeneratorExp, ast.DictComp, ast.SetComp)
+
+DEFAULT_HOT_ROOTS = ["repro.serving.engine.Engine.step",
+                     "repro.models.model.paged_step"]
+
+
+def _host_safe_arg(arg: ast.AST, mod: Module) -> bool:
+    """np.asarray on literals/comprehensions or numpy-produced values is
+    host-side staging, not a device sync."""
+    if isinstance(arg, _HOST_SAFE):
+        return True
+    if isinstance(arg, ast.Call):
+        tgt = resolve_call_target(arg, mod) or ""
+        return tgt.startswith("numpy.")
+    return False
+
+
+class HostSyncRule:
+    """NFP001: the engine syncs device results exactly once per step, in
+    the declared `# nfp: sync-point` function. Any other device->host
+    pull reachable from a hot root is a stall XLA cannot hide."""
+    rule = "NFP001"
+
+    def __init__(self, graph: CallGraph, extra_roots: list[str] | None = None):
+        self.graph = graph
+        roots = list(DEFAULT_HOT_ROOTS) + list(extra_roots or [])
+        for fi in graph.funcs.values():
+            if fi.module.marker_for_def(fi.node, "hot-path"):
+                roots.append(fi.qualname)
+        self.sync_points = {fi.qualname for fi in graph.funcs.values()
+                            if fi.module.marker_for_def(fi.node, "sync-point")}
+        self.roots = graph.match_roots(roots)
+        self.hot = graph.reachable(self.roots, stop=self.sync_points)
+
+    def run(self) -> list[Finding]:
+        findings: list[Finding] = []
+        for qual in sorted(self.hot):
+            fi = self.graph.funcs[qual]
+            findings.extend(self._scan(fi))
+        return findings
+
+    def _project_call_in(self, node: ast.AST, fi: FuncInfo) -> bool:
+        """Does the subtree call into project code (which, on a hot
+        path, returns device values)?"""
+        for sub in ast.walk(node):
+            if isinstance(sub, ast.Call) and self.graph._resolve(sub, fi):
+                return True
+        return False
+
+    def _scan(self, fi: FuncInfo) -> list[Finding]:
+        mod = fi.module
+        device = _device_names(fi.node, mod)
+        out: list[Finding] = []
+
+        def flag(node: ast.AST, what: str) -> None:
+            out.append(Finding(self.rule, mod.rel, node.lineno,
+                               node.col_offset,
+                               f"host sync in hot path: {what}",
+                               fi.qualname))
+
+        for node in _body_nodes(fi.node):
+            if not isinstance(node, ast.Call):
+                continue
+            tgt = resolve_call_target(node, mod) or ""
+            if isinstance(node.func, ast.Attribute) \
+                    and node.func.attr in _SYNC_ATTRS:
+                flag(node, f"`.{node.func.attr}()` forces a device->host "
+                           f"transfer ({unparse_short(node)})")
+            elif tgt in ("numpy.asarray", "numpy.array"):
+                if node.args and not _host_safe_arg(node.args[0], mod):
+                    flag(node, f"`{unparse_short(node)}` pulls a (possibly "
+                               f"device) value to host")
+            elif tgt == "jax.device_get":
+                flag(node, f"`{unparse_short(node)}`")
+            elif isinstance(node.func, ast.Name) \
+                    and node.func.id in ("int", "float", "bool") and node.args:
+                names = {n.id for n in ast.walk(node.args[0])
+                         if isinstance(n, ast.Name)}
+                if names & device:
+                    flag(node, f"`{unparse_short(node)}` scalarizes a "
+                               f"device value")
+                elif self._project_call_in(node.args[0], fi):
+                    flag(node, f"`{unparse_short(node)}` scalarizes a "
+                               f"project-call result (device value on "
+                               f"this path)")
+        return out
+
+
+# =============================================================================
+# NFP002: use after donation
+# =============================================================================
+
+def _donate_positions(call: ast.Call) -> tuple[int, ...] | None:
+    """donate_argnums of a jax.jit(...) call, else None."""
+    for kw in call.keywords:
+        if kw.arg == "donate_argnums":
+            return literal_int_tuple(kw.value)
+    return None
+
+
+def _is_jit_call(call: ast.Call, mod: Module) -> bool:
+    return (resolve_call_target(call, mod) or "") in (
+        "jax.jit", "jax.pjit", "jax.jit.jit")
+
+
+class _DonationRegistry:
+    """Where do donated callables live in this module?
+
+    * bindings:   dotted path / bare name called directly
+                  (`self._zero_slot(...)`, `_table_scatter(...)`)
+    * containers: dict/cache paths indexed at the call site
+                  (`self._decode[mode](...)`)
+    * factories:  functions whose return value is a donated callable
+                  (`self._chunk_fn(mode, b)(...)`)
+    """
+
+    def __init__(self, mod: Module):
+        self.bindings: dict[str, tuple[int, ...]] = {}
+        self.containers: dict[str, tuple[int, ...]] = {}
+        self.factories: dict[str, tuple[int, ...]] = {}
+        self._collect(mod)
+
+    def _jit_donate(self, node: ast.AST, mod: Module) -> tuple[int, ...] | None:
+        if isinstance(node, ast.Call) and _is_jit_call(node, mod):
+            return _donate_positions(node)
+        return None
+
+    def _collect(self, mod: Module) -> None:
+        # pass 1: direct jit(...) bindings, decorated defs, factories
+        for node in ast.walk(mod.tree):
+            if isinstance(node, ast.Assign):
+                self._collect_assign(node, mod, factories=False)
+            elif isinstance(node, FuncDef):
+                pos = self._decorated_positions(node, mod)
+                if pos:
+                    self.bindings[node.name] = pos
+                for sub in ast.walk(node):
+                    if isinstance(sub, ast.Return) and sub.value is not None:
+                        pos = self._jit_donate(sub.value, mod)
+                        if pos:
+                            self.factories[node.name] = pos
+        # pass 2: bindings built FROM factories/containers
+        for node in ast.walk(mod.tree):
+            if isinstance(node, ast.Assign):
+                self._collect_assign(node, mod, factories=True)
+            elif isinstance(node, FuncDef):
+                # `return self._cache[key]` where the container is donated
+                for sub in ast.walk(node):
+                    if isinstance(sub, ast.Return) \
+                            and isinstance(sub.value, ast.Subscript):
+                        path = dotted_path(sub.value.value)
+                        if path in self.containers:
+                            self.factories.setdefault(
+                                node.name, self.containers[path])
+
+    def _decorated_positions(self, node: FuncDef,
+                             mod: Module) -> tuple[int, ...] | None:
+        for dec in node.decorator_list:
+            if not isinstance(dec, ast.Call):
+                continue
+            tgt = resolve_call_target(dec, mod) or ""
+            if tgt.endswith("partial") and dec.args:
+                inner = dec.args[0]
+                if (dotted_path(inner) or "").endswith("jit") \
+                        or (isinstance(inner, ast.Attribute)
+                            and inner.attr == "jit"):
+                    pos = None
+                    for kw in dec.keywords:
+                        if kw.arg == "donate_argnums":
+                            pos = literal_int_tuple(kw.value)
+                    if pos:
+                        return pos
+            elif tgt in ("jax.jit", "jax.pjit"):
+                pos = _donate_positions(dec)
+                if pos:
+                    return pos
+        return None
+
+    def _value_positions(self, val: ast.AST, mod: Module,
+                         factories: bool) -> tuple[int, ...] | None:
+        pos = self._jit_donate(val, mod)
+        if pos:
+            return pos
+        if factories and isinstance(val, ast.Call):
+            name = val.func.id if isinstance(val.func, ast.Name) else \
+                val.func.attr if isinstance(val.func, ast.Attribute) else None
+            if name in self.factories:
+                return self.factories[name]
+        return None
+
+    def _collect_assign(self, node: ast.Assign, mod: Module,
+                        factories: bool) -> None:
+        val = node.value
+        # dict literal / comprehension of donated callables
+        inner = None
+        if isinstance(val, ast.DictComp):
+            inner = val.value
+        elif isinstance(val, ast.Dict) and val.values:
+            inner = val.values[0]
+        for tgt in node.targets:
+            if isinstance(tgt, ast.Subscript):
+                path = dotted_path(tgt.value)
+                pos = self._value_positions(val, mod, factories)
+                if path and pos:
+                    self.containers.setdefault(path, pos)
+            else:
+                path = dotted_path(tgt)
+                if not path:
+                    continue
+                pos = self._value_positions(val, mod, factories)
+                if pos:
+                    self.bindings.setdefault(path, pos)
+                elif inner is not None:
+                    ipos = self._value_positions(inner, mod, factories)
+                    if ipos:
+                        self.containers.setdefault(path, ipos)
+
+    def positions_for_call(self, call: ast.Call) -> tuple[int, ...] | None:
+        f = call.func
+        path = dotted_path(f)
+        if path:
+            if path in self.bindings:
+                return self.bindings[path]
+            bare = path.split(".")[-1]
+            if path.startswith("self.") and bare in self.bindings:
+                return self.bindings[bare]
+        if isinstance(f, ast.Subscript):
+            cpath = dotted_path(f.value)
+            if cpath in self.containers:
+                return self.containers[cpath]
+        if isinstance(f, ast.Call):
+            name = f.func.id if isinstance(f.func, ast.Name) else \
+                f.func.attr if isinstance(f.func, ast.Attribute) else None
+            if name in self.factories:
+                return self.factories[name]
+        return None
+
+
+class DonationRule:
+    """NFP002: a buffer passed at a donate_argnums position is dead the
+    moment the call is issued — XLA may already have reused its pages.
+    Any read before the name is rebound is a use-after-free (JAX raises
+    at runtime on CPU, but only when the buffer is actually donated —
+    interpret/backend changes can hide it)."""
+    rule = "NFP002"
+
+    def __init__(self, graph: CallGraph):
+        self.graph = graph
+        self._registries: dict[int, _DonationRegistry] = {}
+
+    def run(self) -> list[Finding]:
+        findings: list[Finding] = []
+        for qual in sorted(self.graph.funcs):
+            fi = self.graph.funcs[qual]
+            reg = self._registries.get(id(fi.module))
+            if reg is None:
+                reg = self._registries[id(fi.module)] = \
+                    _DonationRegistry(fi.module)
+            findings.extend(self._scan(fi, reg))
+        return findings
+
+    def _scan(self, fi: FuncInfo, reg: _DonationRegistry) -> list[Finding]:
+        found: dict[tuple[int, str], Finding] = {}
+
+        def report(node: ast.AST, path: str, donor_line: int) -> None:
+            k = (node.lineno, path)
+            if k not in found:
+                found[k] = Finding(
+                    self.rule, fi.module.rel, node.lineno, node.col_offset,
+                    f"`{path}` used after being donated (donate_argnums "
+                    f"call on line {donor_line}); rebind it from the "
+                    f"call's result first", fi.qualname)
+
+        def check_uses(expr: ast.AST, poison: dict[str, int]) -> None:
+            for node in ast.walk(expr):
+                if isinstance(node, (ast.Name, ast.Attribute)) \
+                        and isinstance(getattr(node, "ctx", None), ast.Load):
+                    p = dotted_path(node)
+                    if p in poison:
+                        report(node, p, poison[p])
+
+        def apply_donations(expr: ast.AST, poison: dict[str, int]) -> None:
+            for node in ast.walk(expr):
+                if not isinstance(node, ast.Call):
+                    continue
+                pos = reg.positions_for_call(node)
+                if not pos:
+                    continue
+                for i in pos:
+                    if i < len(node.args):
+                        p = dotted_path(node.args[i])
+                        if p:
+                            poison[p] = node.lineno
+
+        def exec_expr(expr: ast.AST | None, poison: dict[str, int]) -> None:
+            if expr is None:
+                return
+            check_uses(expr, poison)
+            apply_donations(expr, poison)
+
+        def clear_target(tgt: ast.AST, poison: dict[str, int]) -> None:
+            elts = tgt.elts if isinstance(tgt, (ast.Tuple, ast.List)) \
+                else [tgt]
+            for e in elts:
+                if isinstance(e, ast.Starred):
+                    e = e.value
+                p = dotted_path(e)
+                if p:
+                    poison.pop(p, None)
+
+        def exec_block(stmts, poison: dict[str, int]) -> None:
+            for st in stmts:
+                exec_stmt(st, poison)
+
+        def merge(a: dict[str, int], b: dict[str, int]) -> dict[str, int]:
+            out = dict(a)
+            out.update(b)
+            return out
+
+        def exec_stmt(st: ast.stmt, poison: dict[str, int]) -> None:
+            if isinstance(st, (FuncDef, ast.ClassDef)):
+                return
+            if isinstance(st, (ast.Assign, ast.AnnAssign)):
+                exec_expr(st.value, poison)
+                tgts = st.targets if isinstance(st, ast.Assign) \
+                    else [st.target]
+                for t in tgts:
+                    clear_target(t, poison)
+            elif isinstance(st, ast.AugAssign):
+                exec_expr(st.value, poison)
+                p = dotted_path(st.target)
+                if p in poison:
+                    report(st.target, p, poison[p])
+                clear_target(st.target, poison)
+            elif isinstance(st, ast.If):
+                exec_expr(st.test, poison)
+                b1, b2 = dict(poison), dict(poison)
+                exec_block(st.body, b1)
+                exec_block(st.orelse, b2)
+                poison.clear()
+                poison.update(merge(b1, b2))
+            elif isinstance(st, (ast.For, ast.AsyncFor)):
+                exec_expr(st.iter, poison)
+                clear_target(st.target, poison)
+                # two passes over the body: the second catches a use in
+                # iteration N of a name donated in iteration N-1
+                exec_block(st.body, poison)
+                clear_target(st.target, poison)
+                exec_block(st.body, poison)
+                exec_block(st.orelse, poison)
+            elif isinstance(st, ast.While):
+                exec_expr(st.test, poison)
+                exec_block(st.body, poison)
+                exec_expr(st.test, poison)
+                exec_block(st.body, poison)
+                exec_block(st.orelse, poison)
+            elif isinstance(st, (ast.With, ast.AsyncWith)):
+                for item in st.items:
+                    exec_expr(item.context_expr, poison)
+                    if item.optional_vars is not None:
+                        clear_target(item.optional_vars, poison)
+                exec_block(st.body, poison)
+            elif isinstance(st, ast.Try):
+                exec_block(st.body, poison)
+                for h in st.handlers:
+                    exec_block(h.body, poison)
+                exec_block(st.orelse, poison)
+                exec_block(st.finalbody, poison)
+            elif isinstance(st, ast.Delete):
+                for t in st.targets:
+                    clear_target(t, poison)
+            else:
+                for val in ast.iter_child_nodes(st):
+                    if isinstance(val, ast.expr):
+                        exec_expr(val, poison)
+
+        exec_block(fi.node.body, {})
+        return [found[k] for k in sorted(found)]
+
+
+# =============================================================================
+# NFP003: unbounded jit-cache key
+# =============================================================================
+
+_BUCKET_HELPERS = ("bucket", "pow2", "cdiv")
+
+
+def _is_bucket_call(call: ast.Call) -> bool:
+    name = call.func.id if isinstance(call.func, ast.Name) else \
+        call.func.attr if isinstance(call.func, ast.Attribute) else ""
+    return any(h in name.lower() for h in _BUCKET_HELPERS)
+
+
+class JitCacheKeyRule:
+    """NFP003: functions that memoize `jax.jit` executables by key must
+    be fed keys of bounded cardinality — a raw length/count key compiles
+    one executable per distinct value (recompile storm + unbounded
+    device memory). Keys must come from a pow2/bucket helper or be
+    constants."""
+    rule = "NFP003"
+
+    def __init__(self, graph: CallGraph):
+        self.graph = graph
+        # cache-fn qualname -> ordered param names that feed the key
+        self.cache_fns: dict[str, list[str]] = {}
+        for qual, fi in graph.funcs.items():
+            params = self._key_params(fi)
+            if params:
+                self.cache_fns[qual] = params
+
+    def _key_params(self, fi: FuncInfo) -> list[str] | None:
+        """Does this function do `container[key] = jax.jit(...)` with
+        `key` built from its own parameters? Returns those parameters."""
+        pnames = [a.arg for a in fi.node.args.args if a.arg != "self"]
+        if not pnames:
+            return None
+        key_exprs: dict[str, ast.AST] = {}
+        for node in _body_nodes(fi.node):
+            if isinstance(node, ast.Assign) \
+                    and isinstance(node.targets[0], ast.Name):
+                key_exprs[node.targets[0].id] = node.value
+        for node in _body_nodes(fi.node):
+            if not (isinstance(node, ast.Assign)
+                    and isinstance(node.targets[0], ast.Subscript)
+                    and isinstance(node.value, ast.Call)
+                    and _is_jit_call(node.value, fi.module)):
+                continue
+            key = node.targets[0].slice
+            if isinstance(key, ast.Name) and key.id in key_exprs:
+                key = key_exprs[key.id]
+            elts = key.elts if isinstance(key, ast.Tuple) else [key]
+            used = [e.id for e in elts
+                    if isinstance(e, ast.Name) and e.id in pnames]
+            if used:
+                return pnames
+        return None
+
+    def run(self) -> list[Finding]:
+        findings: list[Finding] = []
+        for qual in sorted(self.graph.funcs):
+            caller = self.graph.funcs[qual]
+            for node in _body_nodes(caller.node):
+                if isinstance(node, ast.Call):
+                    findings.extend(self._check_call(node, caller))
+        return findings
+
+    def _target_cache_fn(self, call: ast.Call,
+                         caller: FuncInfo) -> tuple[str, list[str]] | None:
+        for target in self.graph._resolve(call, caller):
+            if target in self.cache_fns:
+                return target, self.cache_fns[target]
+        return None
+
+    def _check_call(self, call: ast.Call,
+                    caller: FuncInfo) -> list[Finding]:
+        hit = self._target_cache_fn(call, caller)
+        if hit is None:
+            return []
+        target, params = hit
+        assigns: dict[str, list[ast.AST]] = {}
+        for node in _body_nodes(caller.node):
+            if isinstance(node, ast.Assign):
+                for t in node.targets:
+                    if isinstance(t, ast.Name):
+                        assigns.setdefault(t.id, []).append(node.value)
+        out = []
+        args = list(call.args[: len(params)])
+        for pname, arg in zip(params, args):
+            if self._classify(arg, caller, assigns, depth=0) == "raw":
+                out.append(Finding(
+                    self.rule, caller.module.rel, arg.lineno, arg.col_offset,
+                    f"jit cache `{target.split('.')[-1]}` keyed on raw "
+                    f"value `{unparse_short(arg)}` (param `{pname}`) — "
+                    f"derive it from a pow2/bucket helper or the cache "
+                    f"grows per distinct value", caller.qualname))
+        return out
+
+    def _classify(self, expr: ast.AST, caller: FuncInfo,
+                  assigns: dict[str, list[ast.AST]], depth: int) -> str:
+        """'ok' (bounded), 'raw' (provably unbounded), 'unknown'."""
+        if depth > 4:
+            return "unknown"
+        if isinstance(expr, ast.Constant):
+            return "ok"
+        if isinstance(expr, ast.Call):
+            if _is_bucket_call(expr):
+                return "ok"
+            name = expr.func.id if isinstance(expr.func, ast.Name) else ""
+            if name in ("len", "max", "min", "sum"):
+                return "raw"
+            return "unknown"
+        if isinstance(expr, ast.BinOp):
+            return "raw"
+        if isinstance(expr, ast.Name):
+            for a in caller.node.args.args:
+                if a.arg == expr.id:
+                    ann = a.annotation
+                    if isinstance(ann, ast.Name) and ann.id == "int":
+                        return "raw"
+                    return "unknown"
+            kinds = {self._classify(v, caller, assigns, depth + 1)
+                     for v in assigns.get(expr.id, ())}
+            if "raw" in kinds:
+                return "raw"
+            if kinds == {"ok"}:
+                return "ok"
+            return "unknown"
+        return "unknown"

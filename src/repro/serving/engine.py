@@ -100,6 +100,7 @@ from __future__ import annotations
 
 import collections
 import dataclasses
+import os
 import time
 from typing import Any, Callable
 
@@ -159,7 +160,8 @@ class Engine:
                  clock: Callable[[], float] = time.monotonic,
                  block_size: int = 16,
                  n_blocks: int | None = None, chunk_tokens: int = 256,
-                 prefix_cache: bool = True, window_reclaim: bool = True):
+                 prefix_cache: bool = True, window_reclaim: bool = True,
+                 debug_invariants: bool = False):
         self.cfg = cfg
         self.params = serving_params
         self.controller = controller
@@ -168,6 +170,12 @@ class Engine:
         self.n_slots = n_slots
         self.capacity = capacity
         self.chunk_tokens = chunk_tokens
+        # opt-in runtime sanitizer (Engine(debug_invariants=True) or
+        # NFP_DEBUG=1): audit the BlockManager's refcount/free-list/
+        # table-mirror invariants after every step instead of only where
+        # a test remembers to call check_invariants()
+        self.debug_invariants = debug_invariants \
+            or os.environ.get("NFP_DEBUG") == "1"
         self.kv_planar = kv_planar and cfg.cache_kind == "gqa"
         # raises NotImplementedError for enc-dec — engine serves
         # decoder-only archs (enc-dec is covered by dry-run + benchmarks)
@@ -338,6 +346,10 @@ class Engine:
         # wall time of this step feeds the controller's p90 tracker on the
         # NEXT decision (measured-latency fallback to FP8, paper §3.2)
         self._last_step_ms = (self.clock() - t0) * 1e3
+        if self.debug_invariants:
+            # outside the measured step window, so the controller's p90
+            # and the bench rows stay honest under NFP_DEBUG=1
+            self.blocks.check_invariants()
 
     # =========================================================================
     # paged path: chunked prefill + block-table decode
@@ -684,6 +696,7 @@ class Engine:
         self.stats["decode_dispatches"] += 1
         return ids
 
+    # nfp: sync-point
     def _finalize_step(self, mode: str, pending, decode_ids) -> None:
         """The step's ONLY device->host sync: pull the sampled token ids
         (a few int32s, not logits), patch pending prefill outputs, then

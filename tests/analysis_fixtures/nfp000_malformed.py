@@ -1,0 +1,6 @@
+"""Malformed-directive fixture: each line below is rejected (NFP000) —
+suppressions without a reason rot into unreviewable noise."""
+
+X = 1  # nfp: ignore[NFP001]
+Y = 2  # nfp: ignore[NFP999] not a real rule id
+Z = 3  # nfp: frobnicate

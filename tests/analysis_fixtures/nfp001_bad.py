@@ -1,0 +1,19 @@
+"""NFP001 fixture (bad): host syncs inside a hot-path function.
+
+Never imported — parsed by repro-lint in tests/test_analysis.py; the
+`# expect:` trailing comments are the golden finding locations.
+"""
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+
+
+# nfp: hot-path
+def decode_step(state, tokens):
+    logits = jnp.dot(state, tokens)
+    best = logits.item()                       # expect: NFP001
+    host = np.asarray(logits)                  # expect: NFP001
+    score = float(logits)                      # expect: NFP001
+    jax.device_get(logits)                     # expect: NFP001
+    return best, host, score

@@ -1,0 +1,12 @@
+"""NFP002 fixture (bad): a buffer read after being passed at a
+donate_argnums position — XLA may already have reused its pages."""
+
+import jax
+
+_step = jax.jit(lambda params, batch: params, donate_argnums=(0,))
+
+
+def train(params, batch):
+    new_params = _step(params, batch)
+    stale = params.sum()                       # expect: NFP002
+    return new_params, stale

@@ -1,0 +1,11 @@
+"""NFP002 fixture (good): the donated name is rebound from the call's
+result before any further read — the canonical donation idiom."""
+
+import jax
+
+_step = jax.jit(lambda params, batch: params, donate_argnums=(0,))
+
+
+def train(params, batch):
+    params = _step(params, batch)
+    return params.sum()

@@ -1,0 +1,17 @@
+"""NFP003 fixture (bad): a jit-executable cache keyed on a raw int —
+one compile (and one resident executable) per distinct value."""
+
+import jax
+
+_CACHE = {}
+
+
+def _get_step(n: int):
+    key = (n,)
+    if key not in _CACHE:
+        _CACHE[key] = jax.jit(lambda x: x[:n])
+    return _CACHE[key]
+
+
+def apply(x, n: int):
+    return _get_step(n)(x)                     # expect: NFP003

@@ -1,0 +1,24 @@
+"""NFP003 fixture (good): the cache key passes through a pow2/bucket
+helper, bounding the number of compiled variants."""
+
+import jax
+
+_CACHE = {}
+
+
+def _get_step(n: int):
+    key = (n,)
+    if key not in _CACHE:
+        _CACHE[key] = jax.jit(lambda x: x[:n])
+    return _CACHE[key]
+
+
+def _pow2_bucket(n: int) -> int:
+    b = 1
+    while b < n:
+        b *= 2
+    return b
+
+
+def apply(x, n: int):
+    return _get_step(_pow2_bucket(n))(x)

@@ -1,0 +1,21 @@
+"""NFP004 fixture (bad): pallas_call hygiene violations — an index-map
+whose arity drifted from the grid, a floor-divided grid size with no
+divisibility assert, and no `interpret=` fallback."""
+
+import jax
+from jax.experimental import pallas as pl
+
+
+def _copy_kernel(x_ref, o_ref):
+    o_ref[...] = x_ref[...]
+
+
+def scale_rows(x, bm: int = 128):
+    m, n = x.shape
+    return pl.pallas_call(                     # expect: NFP004
+        _copy_kernel,
+        grid=(m // bm,),                       # expect: NFP004
+        in_specs=[pl.BlockSpec((bm, n), lambda i, j: (i, 0))],  # expect: NFP004
+        out_specs=pl.BlockSpec((bm, n), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct(x.shape, x.dtype),
+    )(x)

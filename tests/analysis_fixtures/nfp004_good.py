@@ -1,0 +1,22 @@
+"""NFP004 fixture (good): grid-arity index maps, a divisibility assert
+backing the floor-divided grid, and a caller-threaded interpret flag."""
+
+import jax
+from jax.experimental import pallas as pl
+
+
+def _copy_kernel(x_ref, o_ref):
+    o_ref[...] = x_ref[...]
+
+
+def scale_rows(x, bm: int = 128, interpret: bool = False):
+    m, n = x.shape
+    assert m % bm == 0, "row tiles must divide the array"
+    return pl.pallas_call(
+        _copy_kernel,
+        grid=(m // bm,),
+        in_specs=[pl.BlockSpec((bm, n), lambda i: (i, 0))],
+        out_specs=pl.BlockSpec((bm, n), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct(x.shape, x.dtype),
+        interpret=interpret,
+    )(x)

@@ -1,0 +1,16 @@
+"""NFP005 fixture (bad): Python `if`/`while`/`assert` on traced values
+inside a jitted body — TracerBoolConversionError at trace time."""
+
+import jax
+import jax.numpy as jnp
+
+
+@jax.jit
+def normalize(x):
+    total = jnp.sum(x)
+    if total > 0:                              # expect: NFP005
+        x = x / total
+    while jnp.any(x > 1.0):                    # expect: NFP005
+        x = x * 0.5
+    assert jnp.all(x <= 1.0)                   # expect: NFP005
+    return x

@@ -1,0 +1,16 @@
+"""NFP005 fixture (good): metadata checks (`.ndim`, `in`) stay Python
+control flow — they are static under tracing — while value-dependent
+branches go through `jnp.where`."""
+
+import jax
+import jax.numpy as jnp
+
+
+@jax.jit
+def normalize(x):
+    assert x.ndim in (1, 2)
+    total = jnp.sum(x)
+    if total.ndim == 0:
+        total = jnp.reshape(total, (1,))
+    safe = jnp.where(total > 0, total, 1.0)
+    return x / safe

@@ -1,0 +1,14 @@
+"""Suite-wide wiring: run every engine test with the BlockManager
+runtime sanitizer on.
+
+``NFP_DEBUG=1`` makes ``Engine.step`` call
+``BlockManager.check_invariants()`` after every step (refcounts,
+free-list consistency, device-table mirror), so any paging bug trips
+at the step that introduces it instead of whichever later test
+happens to call ``check_invariants()`` by hand.  ``setdefault`` keeps
+an explicit ``NFP_DEBUG=0`` from the environment respected.
+"""
+
+import os
+
+os.environ.setdefault("NFP_DEBUG", "1")

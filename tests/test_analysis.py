@@ -1,0 +1,146 @@
+"""repro-lint golden tests.
+
+Each rule has a bad/good fixture pair under ``analysis_fixtures/``: the
+bad file carries ``# expect: NFP00x`` trailing comments on the exact
+lines the analyzer must flag (rule id AND line number are asserted),
+the good file is the idiomatic rewrite and must scan clean.  On top of
+the pairs: the suppression directive, the malformed-directive rule
+(NFP000), baseline round-trip/staleness, and the acceptance check that
+the repo itself lints clean modulo the committed baseline.
+"""
+
+import json
+import re
+from pathlib import Path
+
+import pytest
+
+from repro.analysis import Finding, run_analysis
+from repro.analysis import baseline
+from repro.analysis.cli import main
+
+REPO = Path(__file__).resolve().parents[1]
+FIXTURES = Path(__file__).parent / "analysis_fixtures"
+
+BAD = ["nfp001_bad.py", "nfp002_bad.py", "nfp003_bad.py",
+       "nfp004_bad.py", "nfp005_bad.py"]
+GOOD = ["nfp001_good.py", "nfp002_good.py", "nfp003_good.py",
+        "nfp004_good.py", "nfp005_good.py"]
+
+
+def _findings(name: str) -> list[Finding]:
+    findings, _modules = run_analysis([FIXTURES / name], REPO)
+    return findings
+
+
+def _expected(name: str) -> list[tuple[str, int]]:
+    """(rule, line) pairs from the fixture's `# expect:` markers."""
+    out = []
+    for i, line in enumerate((FIXTURES / name).read_text().splitlines(), 1):
+        m = re.search(r"# expect: (NFP\d{3})", line)
+        if m:
+            out.append((m.group(1), i))
+    assert out, f"{name} declares no expectations"
+    return out
+
+
+# -- golden pairs -------------------------------------------------------------
+
+@pytest.mark.parametrize("name", BAD)
+def test_bad_fixture_exact_findings(name):
+    got = sorted((f.rule, f.line) for f in _findings(name) if f.active)
+    assert got == sorted(_expected(name))
+
+
+@pytest.mark.parametrize("name", GOOD)
+def test_good_fixture_scans_clean(name):
+    assert [f for f in _findings(name) if f.active] == []
+
+
+# -- directives ---------------------------------------------------------------
+
+def test_inline_suppression_keeps_finding_but_not_active():
+    fs = _findings("nfp001_suppressed.py")
+    assert len(fs) == 1
+    f = fs[0]
+    assert f.rule == "NFP001" and f.suppressed and not f.active
+    assert "suppression syntax" in f.suppress_reason
+
+
+def test_malformed_directives_report_nfp000():
+    src = (FIXTURES / "nfp000_malformed.py").read_text().splitlines()
+    bad_lines = [i for i, l in enumerate(src, 1) if "# nfp:" in l]
+    fs = _findings("nfp000_malformed.py")
+    assert sorted((f.rule, f.line) for f in fs) \
+        == [("NFP000", i) for i in bad_lines]
+    assert all(f.active for f in fs)        # malformed directives FAIL the run
+
+
+# -- baseline -----------------------------------------------------------------
+
+def test_baseline_key_is_line_independent():
+    a = Finding("NFP001", "a.py", 10, 0, "msg", "mod.fn")
+    b = Finding("NFP001", "a.py", 99, 4, "msg", "mod.fn")
+    assert a.key() == b.key()
+    c = Finding("NFP002", "a.py", 10, 0, "msg", "mod.fn")
+    assert a.key() != c.key()
+
+
+def test_baseline_roundtrip_marks_everything(tmp_path):
+    bl = tmp_path / "bl.json"
+    baseline.save(bl, _findings("nfp001_bad.py"))
+    fs = _findings("nfp001_bad.py")
+    matched, stale = baseline.apply(bl, fs)
+    assert matched == len(fs) and stale == 0
+    assert all(f.baselined and not f.active for f in fs)
+
+
+def test_baseline_stale_entries_are_counted(tmp_path):
+    bl = tmp_path / "bl.json"
+    baseline.save(bl, _findings("nfp001_bad.py"))
+    fs = _findings("nfp002_bad.py")             # none of these match
+    matched, stale = baseline.apply(bl, fs)
+    assert matched == 0
+    assert stale == len(_findings("nfp001_bad.py"))
+    assert all(f.active for f in fs)
+
+
+# -- CLI ----------------------------------------------------------------------
+
+def test_cli_exit_one_on_seeded_violation(tmp_path, capsys):
+    rc = main([str(FIXTURES / "nfp001_bad.py"), "--repo-root", str(REPO)])
+    assert rc == 1
+    assert "NFP001" in capsys.readouterr().out
+
+
+def test_cli_exit_zero_on_clean_file(capsys):
+    rc = main([str(FIXTURES / "nfp001_good.py"), "--repo-root", str(REPO)])
+    assert rc == 0
+
+
+def test_cli_json_report(tmp_path, capsys):
+    out = tmp_path / "report.json"
+    main([str(FIXTURES / "nfp001_bad.py"), "--repo-root", str(REPO),
+          "--json", str(out)])
+    data = json.loads(out.read_text())
+    assert data["summary"]["active_by_rule"] == {"NFP001": 4}
+    assert {f["rule"] for f in data["findings"]} == {"NFP001"}
+    assert all(f["key"] for f in data["findings"])
+
+
+def test_cli_update_then_check_with_baseline(tmp_path, capsys):
+    bad = str(FIXTURES / "nfp001_bad.py")
+    bl = tmp_path / "bl.json"
+    assert main([bad, "--repo-root", str(REPO), "--baseline", str(bl),
+                 "--update-baseline"]) == 0
+    assert main([bad, "--repo-root", str(REPO),
+                 "--baseline", str(bl)]) == 0
+
+
+# -- acceptance: the repo itself ---------------------------------------------
+
+def test_repo_lints_clean_modulo_committed_baseline(capsys):
+    rc = main(["--repo-root", str(REPO),
+               "--baseline", str(REPO / "nfp-baseline.json")])
+    out = capsys.readouterr().out
+    assert rc == 0, f"new repro-lint findings:\n{out}"
