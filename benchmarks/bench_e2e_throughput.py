@@ -111,8 +111,73 @@ def measured(n_requests: int = 8,
     return rows
 
 
+def _per_chip_bytes(tree) -> int:
+    """Largest per-device footprint of a sharded pytree: the addressable
+    shard shape (NamedSharding.shard_shape) x itemsize per leaf; falls
+    back to the full leaf for uncommitted arrays."""
+    total = 0
+    for leaf in jax.tree_util.tree_leaves(tree):
+        sh = getattr(leaf, "sharding", None)
+        if sh is not None and hasattr(sh, "shard_shape"):
+            n = 1
+            for d in sh.shard_shape(leaf.shape):
+                n *= d
+            total += n * leaf.dtype.itemsize
+        else:
+            total += leaf.nbytes
+    return total
+
+
+def mesh_scaling(sizes=(1, 4)) -> list[dict]:
+    """Tensor-parallel serving (Engine(mesh=...)): per-chip HBM bytes for
+    weights + KV pool and per-step wall latency at mesh 1 vs 4. The
+    memory rows are the point — params and the head-sharded pool must
+    shrink ~linearly with mesh size; CPU step latency is recorded for the
+    dispatch-overhead trend, not as a TPU-meaningful speedup."""
+    from repro.configs import ARCHS
+    from repro.models import model as M
+    from repro.models.convert import to_serving
+    from repro.launch.mesh import make_serving_mesh
+    from repro.serving.engine import Engine, Request
+
+    cfg = ARCHS["qwen1.5-0.5b"].reduced()
+    sparams = to_serving(M.init_params(jax.random.PRNGKey(0), cfg))
+    rows = []
+    for n in sizes:
+        if jax.device_count() < n:
+            rows.append({"name": f"e2e_mesh/qwen_fp8_m{n}",
+                         "skipped": f"needs {n} devices, "
+                                    f"have {jax.device_count()}"})
+            continue
+        mesh = None if n == 1 else make_serving_mesh(n)
+        rng = np.random.RandomState(0)
+        eng = Engine(cfg, sparams, n_slots=8, capacity=128,
+                     forced_mode="fp8", kv_planar=True, block_size=16,
+                     prefix_cache=False, mesh=mesh)
+        for i in range(8):
+            eng.submit(Request(f"r{i}", list(rng.randint(1, 400, 16)),
+                               max_new=8))
+        eng.step()                     # all 8 prefills land in this step
+        first_step_prefill_dispatches = eng.stats["prefill_dispatches"]
+        t0 = time.perf_counter()
+        fin = eng.run()
+        dt = time.perf_counter() - t0
+        toks = sum(len(r.output) for r in fin)
+        rows.append({
+            "name": f"e2e_mesh/qwen_fp8_m{n}",
+            "mesh": n,
+            "param_bytes_per_chip": _per_chip_bytes(eng.params),
+            "kv_pool_bytes_per_chip": _per_chip_bytes(eng.caches),
+            "step_ms": round(dt / max(eng.iteration - 1, 1) * 1e3, 2),
+            "tok_s": round(toks / dt, 1),
+            "steps": eng.iteration,
+            "prefill_dispatches_per_step": first_step_prefill_dispatches,
+        })
+    return rows
+
+
 def run() -> list[dict]:
-    return modeled() + measured()
+    return modeled() + measured() + mesh_scaling()
 
 
 if __name__ == "__main__":

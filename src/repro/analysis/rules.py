@@ -91,7 +91,12 @@ _HOST_SAFE = (ast.Constant, ast.List, ast.Tuple, ast.Dict, ast.ListComp,
               ast.GeneratorExp, ast.DictComp, ast.SetComp)
 
 DEFAULT_HOT_ROOTS = ["repro.serving.engine.Engine.step",
-                     "repro.models.model.paged_step"]
+                     "repro.models.model.paged_step",
+                     # mesh-mode dispatch wrapper and the device-table
+                     # mirror: both sit on every sharded step, so flushes
+                     # there are held to the same no-sync discipline
+                     "repro.serving.shard.sharded_paged_step",
+                     "repro.serving.kvcache.BlockManager.device_tables"]
 
 
 def _host_safe_arg(arg: ast.AST, mod: Module) -> bool:

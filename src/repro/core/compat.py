@@ -25,6 +25,19 @@ def get_ambient_mesh():
     return pxla.thread_resources.env.physical_mesh
 
 
+def mesh_context(mesh):
+    """Context manager installing `mesh` as the ambient mesh for traces
+    opened inside it: `jax.sharding.use_mesh` where it exists (sets the
+    abstract mesh new `get_abstract_mesh` reports), the mesh's own
+    thread-local context on 0.4.x (what `get_ambient_mesh` falls back
+    to). Lets `shard_hint` constraints fire inside serving dispatches
+    without callers caring which API generation is installed."""
+    use_mesh = getattr(jax.sharding, "use_mesh", None)
+    if use_mesh is not None:
+        return use_mesh(mesh)
+    return mesh
+
+
 def make_compat_mesh(shape, axis_names, *, devices=None):
     """`jax.make_mesh` with explicit-Auto axis types where supported.
 

@@ -38,6 +38,23 @@ def make_debug_mesh(data: int = 2, model: int = 2):
                             devices=jax.devices()[:need])
 
 
+def make_serving_mesh(model: int | None = None):
+    """1-D ("model",) tensor-parallel mesh for the paged serving engine
+    (`Engine(mesh=...)`). Serving has no data axis — continuous batching
+    IS the batch dimension — so every chip holds one model shard and the
+    whole mesh advances one engine step together. `model=None` takes all
+    local devices; the 4-device CPU debug shape comes from
+    `XLA_FLAGS=--xla_force_host_platform_device_count=4` set before the
+    first jax import."""
+    devs = jax.devices()
+    n = len(devs) if model is None else model
+    if len(devs) < n:
+        raise RuntimeError(
+            f"serving mesh needs {n} devices, have {len(devs)}; force the "
+            "host device count BEFORE any jax import")
+    return make_compat_mesh((n,), ("model",), devices=devs[:n])
+
+
 def data_axes(mesh) -> tuple[str, ...]:
     """All batch-parallel axes of a mesh (pod folds into data)."""
     return tuple(a for a in mesh.axis_names if a in ("pod", "data"))

@@ -115,6 +115,15 @@ def param_spec(path, leaf, cfg: ArchConfig, mesh) -> P:
             return spec("model" if _div(heads, m) else None)
         if _div(heads, m):
             return spec(None, "model")
+        if _div(n_heads, m):
+            # kv_heads indivisible but q heads divide (gemma3's 4q/1kv):
+            # keep q/out head-parallel and REPLICATE the small K/V
+            # projections — every shard computes the full (few-head) K/V,
+            # which the head-sharded attention then reads without any
+            # collective. Row-parallelizing K/V here would force a
+            # partial-sum all-reduce per layer to rebuild values that are
+            # n_kv/n_heads the size of the q projection.
+            return spec(None, None)
         return spec("model" if _div(body[0], m) else None, None)
     if any(k in keys for k in _OUT_NAMES):
         if rank == 1:
@@ -252,6 +261,41 @@ def cache_spec(path, leaf, cfg: ArchConfig, mesh) -> P:
             dims[2] = daxes + ("model",)
         elif not batch_ok and _div(shape[2], dsz):
             dims[2] = daxes
+    return P(*dims)
+
+
+def paged_cache_spec(path, leaf, cfg: ArchConfig, mesh) -> P:
+    """Serving-engine paged pools (model.init_paged_cache layout — no
+    batch dim; sequences own block ids, not rows).
+
+    * "attn"/"shared" GQA planes (L, NB, BS, Hkv, Hd) — f16 k/v or the
+      four uint8 NestedKV byte planes — shard the KV-HEAD axis over
+      `model` when divisible; indivisible head counts (gemma3's 1 kv
+      head) replicate the pool, mirroring the K/V projection fallback in
+      `param_spec` so pool and projection land on the same layout.
+    * MLA latent planes (L, NB, BS, r): no head axis — replicate. The
+      block axis CANNOT be sharded (the engine scatters at dynamic
+      per-token physical indices) and latents are r≈576 f16/token small.
+    * "ssm" slot planes: mamba2 state (L, slots, H, P, N) shards SSM
+      heads, conv_x (L, slots, W-1, d_inner) shards channels — matching
+      the column-parallel in_z/in_x weights; tiny conv_bc replicates.
+    * block tables / everything else: replicate.
+    """
+    m = model_axis_size(mesh)
+    keys = _keys(path)
+    shape = leaf.shape
+    dims: list[Any] = [None] * len(shape)
+    if any(k in keys for k in ("attn", "shared")):
+        if len(shape) == 5 and _div(shape[3], m):
+            dims[3] = "model"
+    elif "conv_x" in keys:
+        if len(shape) == 4 and _div(shape[3], m):
+            dims[3] = "model"
+    elif "conv_bc" in keys:
+        pass                                   # tiny; replicate channels
+    elif "ssm" in keys:
+        if len(shape) == 5 and _div(shape[2], m):
+            dims[2] = "model"
     return P(*dims)
 
 

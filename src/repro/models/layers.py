@@ -20,6 +20,7 @@ from typing import Any
 
 import jax
 import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
 
 from repro.core.linear import NestedLinearParams, nested_linear
 
@@ -41,6 +42,14 @@ class Runtime:
     # None/"ref" keeps the pure-jnp gather path. Orthogonal to `backend`
     # (the GEMM kernel selector) so pallas attention can pair with ref
     # matmuls on CPU.
+    mesh: Any = None
+    # serving mesh (Engine(mesh=...)): the pure-jnp paths partition via
+    # GSPMD from the committed weight/pool shardings, but a pallas_call
+    # is opaque to the partitioner — with a mesh, the paged-decode
+    # kernel runs under shard_map on per-shard head slices (KV heads
+    # divisible by the model axis) and falls back to the ref gather
+    # path otherwise. None = single-device serving, byte-for-byte
+    # today's behavior.
 
     @property
     def serving(self) -> bool:
@@ -376,7 +385,12 @@ def attention(rt: Runtime, p: dict, cfg, x: jax.Array, *,
                 fl = flat(cache[name]).at[wf].set(
                     val.reshape(-1, *val.shape[2:]))
                 new_cache[name] = fl.reshape(cache[name].shape)
-            if rt.attn_backend == "pallas" and x.shape[1] == 1:
+            hkv = cache["k_hi"].shape[2]
+            msz = rt.mesh.shape["model"] \
+                if rt.mesh is not None and "model" in rt.mesh.axis_names \
+                else 1
+            if rt.attn_backend == "pallas" and x.shape[1] == 1 \
+                    and hkv % msz == 0:
                 # single-token decode over planar blocks: hand the block
                 # table straight to the scalar-prefetch Pallas kernel —
                 # no (B, Cap) logical gather is ever materialized. The
@@ -384,7 +398,12 @@ def attention(rt: Runtime, p: dict, cfg, x: jax.Array, *,
                 # by striding; the scanned per-layer window rides as a
                 # traced (1,) operand so one executable serves a mixed
                 # local/global stack. Interpret mode off-TPU keeps the
-                # path runnable (and CI-testable) on CPU.
+                # path runnable (and CI-testable) on CPU. Under a
+                # serving mesh the kernel runs inside shard_map on
+                # per-shard head slices (KV heads over `model`; q heads
+                # follow since H = Hkv·G); when kv_heads does not divide
+                # the axis the `hkv % msz` guard above routes decode to
+                # the GSPMD-partitionable ref gather instead.
                 from repro.kernels.planar_decode_attention import (
                     paged_planar_decode_attention)
                 bs_tok = cache["k_hi"].shape[1]
@@ -392,12 +411,36 @@ def attention(rt: Runtime, p: dict, cfg, x: jax.Array, *,
                 wa = None
                 if window is not None:
                     wa = jnp.reshape(jnp.asarray(window, jnp.int32), (1,))
-                o = paged_planar_decode_attention(
-                    q[:, 0], new_cache["k_hi"], new_cache["k_lo"],
-                    new_cache["v_hi"], new_cache["v_lo"], tables,
-                    _as_lens(kv_len, b), fp8=(rt.mode == "fp8"),
-                    window_arr=wa,
-                    interpret=jax.default_backend() != "tpu")[:, None]
+                fp8 = rt.mode == "fp8"
+                interp = jax.default_backend() != "tpu"
+                if msz > 1:
+                    from jax.experimental.shard_map import shard_map
+                    # window placeholder must be concrete for shard_map
+                    # (0 = global; arithmetic-identical to None)
+                    wa0 = wa if wa is not None \
+                        else jnp.zeros((1,), jnp.int32)
+
+                    def _local(qq, kh, kl, vh, vl, tb, ln, w):
+                        return paged_planar_decode_attention(
+                            qq, kh, kl, vh, vl, tb, ln, fp8=fp8,
+                            window_arr=w, interpret=interp)
+                    pool = P(None, None, "model", None)
+                    o = shard_map(
+                        _local, mesh=rt.mesh,
+                        in_specs=(P(None, "model", None), pool, pool,
+                                  pool, pool, P(None, None), P(None),
+                                  P(None)),
+                        out_specs=P(None, "model", None),
+                        check_rep=False)(
+                        q[:, 0], new_cache["k_hi"], new_cache["k_lo"],
+                        new_cache["v_hi"], new_cache["v_lo"], tables,
+                        _as_lens(kv_len, b), wa0)[:, None]
+                else:
+                    o = paged_planar_decode_attention(
+                        q[:, 0], new_cache["k_hi"], new_cache["k_lo"],
+                        new_cache["v_hi"], new_cache["v_lo"], tables,
+                        _as_lens(kv_len, b), fp8=fp8, window_arr=wa,
+                        interpret=interp)[:, None]
                 o = o.reshape(b, x.shape[1], -1).astype(rt.dtype)
                 return apply_linear(rt, p["wo"], o), new_cache
             if rt.mode == "fp8":

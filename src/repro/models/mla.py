@@ -107,7 +107,14 @@ def mla_attention(rt: Runtime, p: dict, cfg, x: jax.Array, *, phase: str,
     q_nope, q_rope = _project_q(rt, p, cfg, x, positions)
 
     if phase == "paged":
-        from repro.models.layers import _as_lens
+        from repro.models.layers import _as_lens, shard_hint
+        # serving-mesh layout: latent planes are replicated (no head
+        # axis — launch.sharding.paged_cache_spec), parallelism lives in
+        # the HEAD axis of the absorbed attention. Pin the query heads
+        # so GSPMD keeps the wq_b column sharding through the einsum
+        # chain instead of replicating the per-head score tensors.
+        q_nope = shard_hint(q_nope, None, None, "model", None)
+        q_rope = shard_hint(q_rope, None, None, "model", None)
         phys_write, phys_read, q_offset = paged
         c_new, kr_new = _project_kv_latent(rt, p, cfg, x, positions)
         wf = phys_write.reshape(-1)

@@ -240,7 +240,7 @@ def cache_descriptor(cfg: ArchConfig, planar: bool = False) -> "KV.CacheDescript
 
 def init_paged_cache(cfg: ArchConfig, n_total_blocks: int, block_size: int,
                      n_slots: int | None = None,
-                     planar: bool = False) -> dict:
+                     planar: bool = False, mesh=None) -> dict:
     """Descriptor-driven serving cache pytree. Paged planes are shaped
     (L, NB, BS, *token_shape) with NO batch dim — sequences own block
     ids, not rows (serving/kvcache.py BlockManager; physical block 0 is
@@ -250,7 +250,13 @@ def init_paged_cache(cfg: ArchConfig, n_total_blocks: int, block_size: int,
 
     Subtree keys match the legacy cache convention so model code is
     layout-agnostic: "attn" (gqa/mla paged planes), "shared" (hybrid's
-    paged shared-attention planes), "ssm" (slot-resident state)."""
+    paged shared-attention planes), "ssm" (slot-resident state).
+
+    mesh: commit the pools onto a serving mesh as they are created —
+    each plane's placement follows its descriptor role through
+    `launch.sharding.paged_cache_spec` (GQA planes KV-head-sharded when
+    divisible, MLA latents/conv_bc replicated, SSM state head-sharded).
+    None keeps today's single-device arrays."""
     desc = cache_descriptor(cfg, planar=planar)
     out: dict[str, Any] = {}
     if desc.planes:
@@ -267,6 +273,12 @@ def init_paged_cache(cfg: ArchConfig, n_total_blocks: int, block_size: int,
             p.name: jnp.zeros((p.shape[0], n_slots) + tuple(p.shape[1:]),
                               jnp.dtype(p.dtype))
             for p in desc.slot_planes}
+    if mesh is not None:
+        from repro.launch import sharding as SH
+        shapes = jax.tree.map(
+            lambda a: jax.ShapeDtypeStruct(a.shape, a.dtype), out)
+        out = jax.device_put(
+            out, SH.tree_shardings(shapes, mesh, SH.paged_cache_spec, cfg))
     return out
 
 

@@ -99,7 +99,9 @@ turns them into the `engine_dispatch/*` rows the CI smoke asserts.
 from __future__ import annotations
 
 import collections
+import contextlib
 import dataclasses
+import functools
 import os
 import time
 from typing import Any, Callable
@@ -109,9 +111,11 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.configs.base import ArchConfig
+from repro.core.compat import mesh_context
 from repro.core.policy import DualPrecisionController, StepObservation
 from repro.models import model as M
 from repro.models.layers import Runtime
+from repro.serving import shard as SHARD
 from repro.serving.kvcache import BlockManager, SlotManager
 
 
@@ -161,9 +165,17 @@ class Engine:
                  block_size: int = 16,
                  n_blocks: int | None = None, chunk_tokens: int = 256,
                  prefix_cache: bool = True, window_reclaim: bool = True,
-                 debug_invariants: bool = False):
+                 debug_invariants: bool = False, mesh=None):
+        # mesh (launch.mesh.make_serving_mesh): drive an N-chip
+        # tensor-parallel mesh as ONE logical device — weights and the
+        # paged pool are committed to sharded layouts here (serving/
+        # shard.py axis table) and every step stays a single pjit
+        # dispatch whose partitioning GSPMD derives from them. None
+        # preserves single-device serving byte-for-byte.
         self.cfg = cfg
-        self.params = serving_params
+        self.mesh = mesh
+        self.params = serving_params if mesh is None \
+            else SHARD.shard_serving_params(serving_params, cfg, mesh)
         self.controller = controller
         self.forced_mode = forced_mode
         self.clock = clock
@@ -205,7 +217,7 @@ class Engine:
         # anything it cannot serve falls back to the ref gather path
         self._rts = {m: Runtime(mode=m, backend=backend, dtype=jnp.float32,
                                 attn_backend=None if attn_backend == "ref"
-                                else attn_backend)
+                                else attn_backend, mesh=mesh)
                      for m in ("fp16", "fp8")}
         self.block_size = block_size
         mbs = -(-capacity // block_size)
@@ -224,14 +236,23 @@ class Engine:
             n_blocks = n_slots * mbs         # dense-equivalent pool by default
         self.blocks = BlockManager(n_slots, block_size, n_blocks, mbs,
                                    prefix_cache=prefix_cache,
-                                   group_windows=gw)
+                                   group_windows=gw,
+                                   mirror_sharding=None if mesh is None
+                                   else SHARD.replicated(mesh))
         # slot-resident state side (hybrid/ssm descriptors): SlotManager
         # tracks per-slot occupancy in lockstep with the block tables
         self.slot_state = SlotManager(n_slots, capacity) \
             if self.desc.slot_planes else None
         self.caches = M.init_paged_cache(
             cfg, self.blocks.n_total_blocks, block_size, n_slots=n_slots,
-            planar=self.kv_planar)
+            planar=self.kv_planar, mesh=mesh)
+        # the step entry point: identical call signature either way, so
+        # the dispatch sites below never branch on the mesh. Sharded
+        # mode routes through serving/shard.sharded_paged_step (a
+        # repro-lint hot root), which pins the tiny control operands
+        # replicated and leaves pool/weight partitioning to GSPMD.
+        self._paged_step = M.paged_step if mesh is None \
+            else functools.partial(SHARD.sharded_paged_step, mesh)
         # one compile per window group: src/dst are traced scalars into
         # the block axis; donating the cache lets XLA update the one
         # block in place instead of materializing a whole-pool copy per
@@ -269,7 +290,8 @@ class Engine:
         # (n_slots,) int32 ids, not (B, vocab) logits); caches donated so
         # pools update in place
         self._decode = {
-            m: jax.jit(lambda p, c, t, tab, qo, kvl, _m=m: M.paged_step(
+            m: jax.jit(lambda p, c, t, tab, qo, kvl, _m=m:
+                       self._paged_step(
                 self._rts[_m], p, cfg, t, c, tab, q_offset=qo,
                 kv_len=kvl, block_size=block_size), donate_argnums=(1,))
             for m in ("fp16", "fp8")}
@@ -327,7 +349,22 @@ class Engine:
         """One engine iteration: O(1) jitted dispatches regardless of how
         many sequences are prefilling or decoding (attention families —
         recurrent descriptors dispatch per chunk), with the step's device
-        results synced to host exactly once at the end."""
+        results synced to host exactly once at the end.
+
+        Under a serving mesh the dispatch/h2d counters in `stats` keep
+        counting LOGICAL steps: every jitted call below is one pjit
+        program spanning all shards, so `prefill_dispatches` et al. and
+        `h2d_bytes` are mesh-size-invariant (asserted by the dispatch
+        tests) — replication fan-out is XLA's job, not a per-shard loop
+        here."""
+        with (contextlib.nullcontext() if self.mesh is None
+              else mesh_context(self.mesh)):
+            # the ambient mesh lets shard_hint constraints inside the
+            # model stack (mla absorbed-q pinning et al.) take effect;
+            # all committed-operand partitioning works without it
+            self._step_inner()
+
+    def _step_inner(self) -> None:
         self.iteration += 1
         t0 = self.clock()
         plan = self._plan_chunks()
@@ -439,7 +476,7 @@ class Engine:
             def fn(p, caches, tokens, tables, row, q_offset, kv_len,
                    logit_pos, slot):
                 table = jax.lax.dynamic_slice_in_dim(tables, row, 1, axis=1)
-                return M.paged_step(rt, p, cfg, tokens, caches, table,
+                return self._paged_step(rt, p, cfg, tokens, caches, table,
                                     q_offset=q_offset, kv_len=kv_len,
                                     block_size=bs, logit_position=logit_pos,
                                     slot=slot if slotted else None)
@@ -461,7 +498,7 @@ class Engine:
             def fn(p, caches, tokens, tables, rows, q_offset, kv_len,
                    logit_pos):
                 tab = jnp.take(tables, rows, axis=1)     # (G, R, MB)
-                return M.paged_step(rt, p, cfg, tokens, caches, tab,
+                return self._paged_step(rt, p, cfg, tokens, caches, tab,
                                     q_offset=q_offset, kv_len=kv_len,
                                     block_size=bs, logit_position=logit_pos)
             self._fused_cache[key] = jax.jit(fn, donate_argnums=(1,))

@@ -353,7 +353,8 @@ class BlockManager:
 
     def __init__(self, n_slots: int, block_size: int, n_blocks: int,
                  max_blocks_per_seq: int, prefix_cache: bool = False,
-                 group_windows: tuple[int | None, ...] = (None,)):
+                 group_windows: tuple[int | None, ...] = (None,),
+                 mirror_sharding=None):
         assert block_size > 0 and n_blocks > 0
         assert group_windows and all(w is None or w > 0 for w in group_windows)
         self.n_slots = n_slots
@@ -384,8 +385,14 @@ class BlockManager:
         self._tables = np.full((self.n_groups, n_slots, max_blocks_per_seq),
                                TRASH_BLOCK, np.int32)
         # device mirror of _tables: created on first device_tables() call,
-        # then maintained by small jitted scatters of the dirty set
+        # then maintained by small jitted scatters of the dirty set.
+        # mirror_sharding (a replicated NamedSharding under a serving
+        # mesh) commits the first upload onto every shard; the donated
+        # scatter then keeps that placement, so per-step flushes stay
+        # ONE logical dispatch of O(dirty) entries — never a per-shard
+        # re-upload of the table
         self._dev_tables = None
+        self.mirror_sharding = mirror_sharding
         self._dirty: dict[tuple[int, int, int], int] = {}
         self.table_h2d_bytes = 0         # bytes shipped host->device
         self.table_flushes = 0           # incremental scatter dispatches
@@ -482,7 +489,11 @@ class BlockManager:
         — identical in content to `group_tables()`, with h2d traffic
         proportional to the CHANGE, not the table."""
         if self._dev_tables is None:
-            self._dev_tables = jnp.asarray(self._tables)
+            if self.mirror_sharding is not None:
+                self._dev_tables = jax.device_put(self._tables,
+                                                  self.mirror_sharding)
+            else:
+                self._dev_tables = jnp.asarray(self._tables)
             self.table_h2d_bytes += self._tables.nbytes
             self.table_flushes += 1
             return self._dev_tables

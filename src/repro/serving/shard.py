@@ -1,0 +1,82 @@
+"""Tensor-parallel placement for the paged serving engine.
+
+One engine drives an N-chip ("model",)-axis mesh (`launch.mesh
+.make_serving_mesh`) as ONE logical device: weights and the paged KV
+pool are committed to sharded layouts at engine construction, and every
+per-step dispatch stays a single pjit program whose partitioning GSPMD
+derives from those committed operands. The host-side scheduler
+(BlockManager, chunk planner, controller) is untouched — it never knew
+about devices in the first place.
+
+Layout (axis table in serving/README.md):
+
+  NestedFP planar weights   `launch.sharding.param_spec` — attention
+                            projections head-parallel, MLP column/row
+                            parallel, with the K/V-replication fallback
+                            when kv_heads % model != 0 (gemma3).
+  paged KV pool             `launch.sharding.paged_cache_spec` — GQA
+                            K/V (and NestedKV byte) planes sharded on
+                            the KV-head axis, MLA latents and conv_bc
+                            replicated, SSM state head-sharded.
+  block tables              replicated (`BlockManager.mirror_sharding`)
+                            — a few KiB of int32 every shard needs to
+                            resolve its gathers; the incremental
+                            dirty-entry scatter updates all replicas
+                            from ONE logical flush per step.
+  per-step operands         replicated (tokens, q_offset, kv_len,
+                            logit_position — pinned below so GSPMD
+                            never tries to partition control data).
+
+`sharded_paged_step` is the hot-path entry point registered with
+repro-lint: it must stay free of host syncs exactly like the
+single-device `model.paged_step` it wraps.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro.models import model as M
+
+
+def replicated(mesh) -> NamedSharding:
+    """The 'every shard holds all of it' placement for tiny host-built
+    step inputs (tables, token ids, row indices)."""
+    return NamedSharding(mesh, P())
+
+
+def shard_serving_params(params, cfg, mesh):
+    """Commit a `to_serving` parameter tree onto the mesh via the
+    training-path resolver (`param_spec` sees the same dict keys —
+    wq/wk/... — through NestedLinearParams/NestedTensor pytree nodes,
+    and byte planes have the same shapes as the f16 weights they
+    encode)."""
+    from repro.launch import sharding as SH
+    shapes = jax.tree.map(
+        lambda a: jax.ShapeDtypeStruct(a.shape, a.dtype), params)
+    return jax.device_put(
+        params, SH.tree_shardings(shapes, mesh, SH.param_spec, cfg))
+
+
+def sharded_paged_step(mesh, rt, params, cfg, tokens, caches, block_tables,
+                       *, q_offset, kv_len, block_size, logit_position=None,
+                       slot=None, return_logits: bool = False):
+    """`model.paged_step` as a mesh program: same signature (after the
+    leading mesh), same semantics, one logical dispatch. Small per-step
+    operands are pinned replicated so partitioning lives entirely in the
+    weight/pool operands; the sampled ids come back replicated, making
+    the engine's single end-of-step sync a local host read."""
+    rep = NamedSharding(mesh, P())
+
+    def pin(x):
+        return jax.lax.with_sharding_constraint(jnp.asarray(x), rep)
+
+    out, new_caches = M.paged_step(
+        rt, params, cfg, pin(tokens), caches, pin(block_tables),
+        q_offset=pin(q_offset), kv_len=pin(kv_len), block_size=block_size,
+        logit_position=None if logit_position is None
+        else pin(logit_position),
+        slot=slot, return_logits=return_logits)
+    return jax.lax.with_sharding_constraint(out, rep), new_caches

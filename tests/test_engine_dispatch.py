@@ -270,3 +270,36 @@ class TestPallasBackend:
         fin = eng.run()
         assert len(fin) == 1 and len(fin[0].output) == 3
         assert all(0 <= t < cfg.vocab_size for t in fin[0].output)
+
+
+class TestMeshStats:
+    def test_stats_count_logical_steps_under_serving_mesh(self, tiny):
+        """Satellite of the sharded-serving refactor: `Engine.stats`
+        accounts LOGICAL steps, so every dispatch and h2d counter must be
+        identical between mesh=None and a serving mesh. A 1-device mesh
+        exercises the full sharded path (committed shardings, pinned
+        control operands, the mesh_context dispatch wrapper) without
+        needing forced devices, so this guards the accounting in the
+        default tier-1 lane; tests/test_mesh_serving.py repeats the
+        assertion at mesh size 4."""
+        from repro.launch.mesh import make_serving_mesh
+        cfg, sparams = tiny
+
+        def serve(mesh):
+            eng = Engine(cfg, sparams, n_slots=8, capacity=64,
+                         forced_mode="fp16", chunk_tokens=512,
+                         prefix_cache=False, mesh=mesh)
+            for i, p in enumerate(PROMPTS):
+                eng.submit(Request(f"r{i}", p, max_new=3))
+            fin = eng.run()
+            return {r.request_id: r.output for r in fin}, eng
+
+        ref, eref = serve(None)
+        got, egot = serve(make_serving_mesh(1))
+        assert got == ref
+        assert egot.stats == eref.stats, (eref.stats, egot.stats)
+        assert egot.stats["prefill_dispatches"] == 1
+        # per-step normalization the benchmarks report
+        assert egot.stats["prefill_dispatches"] \
+            == eref.stats["prefill_dispatches"]
+        assert egot.stats["h2d_bytes"] == eref.stats["h2d_bytes"]

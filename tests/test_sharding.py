@@ -87,6 +87,102 @@ class TestResolverRules:
         assert s == P("model", None)
 
 
+class ServeMesh4:
+    """Duck-typed 1-D serving mesh, mirroring make_serving_mesh(4)."""
+    shape = {"model": 4}
+    axis_names = ("model",)
+
+
+def _serve_spec(arch, keypath, shape, mesh=None):
+    from repro.launch.sharding import param_spec
+
+    class Key:
+        def __init__(self, k):
+            self.key = k
+    path = tuple(Key(k) for k in keypath)
+    return param_spec(path, jax.ShapeDtypeStruct(shape, jnp.float32),
+                      ARCHS[arch], mesh or ServeMesh4())
+
+
+class TestKVProjectionFallback:
+    """gemma3's 4 q / 1 kv heads on a 4-wide serving mesh: q and out stay
+    head-parallel while the small K/V projections REPLICATE (the middle
+    fallback) instead of row-parallelizing, which would cost a partial-sum
+    all-reduce per layer to rebuild tensors 1/4 the q projection's size."""
+
+    def test_gemma3_q_heads_stay_column_parallel(self):
+        s = _serve_spec("gemma3-1b", ("layers", "attn", "wq", "w"),
+                        (26, 1152, 1024))
+        assert s == P(None, None, "model")     # 4 heads % 4 == 0
+
+    def test_gemma3_kv_replicates_not_row_parallel(self):
+        for name in ("wk", "wv"):
+            s = _serve_spec("gemma3-1b", ("layers", "attn", name, "w"),
+                            (26, 1152, 256))
+            assert s == P(None, None, None), name   # 1 kv head: replicate
+            s = _serve_spec("gemma3-1b", ("layers", "attn", name, "b"),
+                            (26, 256))
+            assert s == P(None, None), name
+
+    def test_gemma3_out_proj_row_parallel_over_heads(self):
+        s = _serve_spec("gemma3-1b", ("layers", "attn", "wo", "w"),
+                        (26, 1024, 1152))
+        assert s == P(None, "model", None)
+
+    def test_wide_mesh_still_takes_row_parallel_branch(self):
+        """On the 16-wide training mesh neither 1 kv nor 4 q heads divide,
+        so the pre-existing row-parallel fallback still fires — the new
+        middle case must not change training layouts."""
+        s = _serve_spec("gemma3-1b", ("layers", "attn", "wk", "w"),
+                        (26, 1152, 256), mesh=FakeMesh())
+        assert s == P(None, "model", None)     # 1152 % 16 == 0
+
+    def test_divisible_kv_unaffected(self):
+        """qwen3 8 kv heads divide 4: K/V keep head-column sharding."""
+        s = _serve_spec("qwen3-8b", ("layers", "attn", "wk", "w"),
+                        (36, 4096, 1024))
+        assert s == P(None, None, "model")
+
+
+class TestPagedCacheSpec:
+    """Pool-plane layouts for Engine(mesh=...) — paged_cache_spec."""
+
+    def _spec(self, keypath, shape):
+        from repro.launch.sharding import paged_cache_spec
+
+        class Key:
+            def __init__(self, k):
+                self.key = k
+        path = tuple(Key(k) for k in keypath)
+        return paged_cache_spec(path, jax.ShapeDtypeStruct(shape, jnp.uint8),
+                                ARCHS["qwen1.5-0.5b"], ServeMesh4())
+
+    def test_gqa_planes_shard_kv_heads(self):
+        # (L, NB, BS, Hkv, Hd): 4 kv heads over 4 shards
+        assert self._spec(("attn", "k_hi"), (2, 64, 16, 4, 64)) \
+            == P(None, None, None, "model", None)
+
+    def test_indivisible_kv_heads_replicate(self):
+        # gemma3-style 1 kv head: replicated pool, matching the
+        # projection fallback above
+        assert self._spec(("shared", "v_lo"), (26, 64, 16, 1, 256)) \
+            == P(None, None, None, None, None)
+
+    def test_mla_latents_replicate(self):
+        # (L, NB, BS, r): no head axis, block axis unshardable (dynamic
+        # scatter indices) -> fully replicated
+        assert self._spec(("attn", "c_kv"), (4, 64, 16, 512)) \
+            == P(None, None, None, None)
+
+    def test_ssm_state_shards_heads_conv_shards_channels(self):
+        assert self._spec(("ssm",), (8, 4, 16, 64, 128)) \
+            == P(None, None, "model", None, None)
+        assert self._spec(("conv_x",), (8, 4, 3, 1024)) \
+            == P(None, None, None, "model")
+        assert self._spec(("conv_bc",), (8, 4, 3, 256)) \
+            == P(None, None, None, None)
+
+
 class TestShapePolicy:
     def test_long_500k_skips_full_attention(self):
         ok, why = steps.shape_supported(ARCHS["qwen3-8b"],
