@@ -96,7 +96,13 @@ DEFAULT_HOT_ROOTS = ["repro.serving.engine.Engine.step",
                      # mirror: both sit on every sharded step, so flushes
                      # there are held to the same no-sync discipline
                      "repro.serving.shard.sharded_paged_step",
-                     "repro.serving.kvcache.BlockManager.device_tables"]
+                     "repro.serving.kvcache.BlockManager.device_tables",
+                     # speculative decoding rides inside the decode
+                     # dispatch: the host-side draft proposer and the
+                     # adaptive-K policy run every step and must stay
+                     # pure bookkeeping (a sync there serializes decode)
+                     "repro.serving.speculate.NgramProposer.propose",
+                     "repro.core.policy.AdaptiveKController.decide"]
 
 
 def _host_safe_arg(arg: ast.AST, mod: Module) -> bool:

@@ -3,8 +3,18 @@
 One weight copy (2 bytes/weight) serves both modes:
   mode="fp16": lossless path — plain f16 GEMM semantics via the
                reconstructing kernel (or its ref oracle).
-  mode="fp8":  fast path — per-tensor dynamic absmax activation quant,
-               GEMM on the upper byte, dequant by act_scale * 2^-8.
+  mode="fp8":  fast path — dynamic absmax activation quant, GEMM on the
+               upper byte, dequant by act_scale * 2^-8. `act_quant`
+               picks the scale granularity: "per_tensor" (the paper's
+               scheme, default) or "per_token" — one scale per
+               activation row, which makes every token's result
+               independent of what else shares the dispatch. The
+               serving engine runs per_token so fp8 generation is
+               BATCH-INVARIANT: continuous batching and speculative
+               C=K+1 verification chunks reshape the batch every step,
+               and a per-tensor amax would let co-batched tokens
+               perturb each other's rounding (outputs then differ
+               run-to-run for the same request).
 Exception tensors (any |w| > 1.75) always run the f16 path, in both modes
 (paper §4.2 "Handling Exception Layers").
 
@@ -64,12 +74,15 @@ class NestedLinearParams:
 
 def nested_linear(params: NestedLinearParams, x: jax.Array, *,
                   mode: Mode = "fp16", backend: str | None = None,
-                  out_dtype=None, fast_accum: bool = False) -> jax.Array:
+                  out_dtype=None, fast_accum: bool = False,
+                  act_quant: str = "per_tensor") -> jax.Array:
     """Apply y = x @ W (+ b) at the selected precision.
 
     x: (..., K). Returns (..., N) in out_dtype (default: x.dtype).
     fast_accum: bf16 dot outputs => cross-shard partial sums travel in
     bf16 (halves tensor-parallel all-reduce bytes; serving-only trade).
+    act_quant: fp8 activation scale granularity — "per_tensor" (paper
+    scheme) or "per_token" (batch-invariant; module docstring).
     """
     out_dtype = out_dtype or x.dtype
     acc = jnp.bfloat16 if fast_accum else jnp.float32
@@ -83,7 +96,13 @@ def nested_linear(params: NestedLinearParams, x: jax.Array, *,
                                       backend=backend, out_dtype=acc,
                                       acc_dtype=acc)
     elif mode == "fp8":
-        xq, scale = quant.quantize_act_per_tensor(x)
+        if act_quant == "per_token":
+            xq, scale = quant.quantize_act_per_token(x)
+            # (..., 1) row scales, flattened to match the GEMM's (M, K)
+            # view of x — each row's dequant is independent of the batch
+            scale = scale.reshape(-1, 1)
+        else:
+            xq, scale = quant.quantize_act_per_tensor(x)
         y = ops.matmul_nested_fp8(xq, w.upper, scale, backend=backend,
                                   out_dtype=acc, acc_dtype=acc)
     else:

@@ -57,6 +57,8 @@ class StepObservation:
                                      # pool — GQA K/V, MLA latent, or hybrid
                                      # shared-attn blocks alike (None: caller
                                      # has no pool, e.g. the simulator)
+    spec_drafted: int = 0            # draft tokens verified in the last step
+    spec_accepted: int = 0           # ... of which the model confirmed
 
 
 class DualPrecisionController:
@@ -69,7 +71,14 @@ class DualPrecisionController:
         self.fp16_ms_per_token = fp16_ms_per_token
         self.fp8_ms_per_token = fp8_ms_per_token
         self.fixed_overhead_ms = fixed_overhead_ms
-        self._recent = collections.deque(maxlen=slo.p90_window)
+        # measured step times PER MODE. One shared deque mixed FP8 and
+        # FP16 samples: after an FP8 dwell the fast-mode samples dragged
+        # the p90 under budget, the controller returned to FP16, the
+        # first slow FP16 step re-triggered FP8, and the cycle flapped —
+        # every measured decision must be made against samples of the
+        # mode it is predicting (FP16).
+        self._recent = {m: collections.deque(maxlen=slo.p90_window)
+                        for m in ("fp16", "fp8")}
         self._fp8_dwell = 0
         self.mode: str = "fp16"
         self.history: list[str] = []
@@ -79,34 +88,49 @@ class DualPrecisionController:
         per_tok = self.fp16_ms_per_token if mode == "fp16" else self.fp8_ms_per_token
         return self.fixed_overhead_ms + per_tok * batch_tokens
 
-    def _p90(self) -> float | None:
-        if len(self._recent) < 8:
+    def _p90(self, mode: str = "fp16") -> float | None:
+        recent = self._recent[mode]
+        if len(recent) < 8:
             return None
-        s = sorted(self._recent)
+        s = sorted(recent)
         return s[int(0.9 * (len(s) - 1))]
 
     # -- decision -------------------------------------------------------------
     def decide(self, obs: StepObservation) -> str:
         if obs.measured_step_ms is not None:
-            self._recent.append(obs.measured_step_ms)
+            # the sample measures the PREVIOUS step, which ran in the
+            # previously-decided mode — tag it accordingly
+            prev = self.history[-1] if self.history else self.mode
+            self._recent[prev].append(obs.measured_step_ms)
 
         budget = self.slo.tpot_ms * self.slo.headroom
         # chunked prefill rides the same iteration as decode, so its token
         # budget stretches the step just like decode tokens do
         pred_fp16 = self.predict_step_ms(
             obs.batch_tokens + obs.prefill_tokens, "fp16")
-        p90 = self._p90()
+        pred_over = pred_fp16 > budget
+        # the measured fallback asks "would FP16 violate the SLO?", so it
+        # must read FP16 samples only — FP8 dwell samples say nothing
+        # about FP16 latency
+        p90 = self._p90("fp16")
+        measured_over = p90 is not None and p90 > budget
         # free-block headroom is a leading indicator: exhaustion means
         # preemption-and-recompute, which costs far more than the step
         mem_pressure = (obs.free_block_frac is not None
                         and obs.free_block_frac < self.slo.free_block_frac_min)
-        overloaded = (pred_fp16 > budget
-                      or (p90 is not None and p90 > budget)
-                      or mem_pressure)
+        overloaded = pred_over or measured_over or mem_pressure
 
         if overloaded:
             self.mode = "fp8"
             self._fp8_dwell = self.slo.hysteresis_steps
+            if measured_over and not (pred_over or mem_pressure) \
+                    and self.history and self.history[-1] == "fp8":
+                # evidence-only overload while already dwelling in FP8:
+                # the FP16 deque cannot refresh (FP8 steps add no FP16
+                # samples), so age the stale evidence one sample per
+                # step — once it drains, the controller re-probes FP16
+                # instead of trusting pre-overload measurements forever.
+                self._recent["fp16"].popleft()
         elif self.mode == "fp8":
             self._fp8_dwell -= 1
             if self._fp8_dwell <= 0:
@@ -119,3 +143,63 @@ class DualPrecisionController:
         if not self.history:
             return 1.0
         return self.history.count("fp16") / len(self.history)
+
+
+# =============================================================================
+# speculation-length policy (serving/speculate.py drafting)
+# =============================================================================
+
+@dataclasses.dataclass
+class SpeculationConfig:
+    """Knobs for n-gram speculative decoding (serving/speculate.py) and
+    the adaptive draft-length policy below.
+
+    K is the per-row draft budget: every decode step verifies up to K
+    drafted tokens in one C=K+1 ragged `paged_step` chunk, so K trades
+    verification compute (wasted on rejected tails) against accepted
+    tokens per dispatch. DISCO-style adaptation tracks the recent
+    acceptance rate and walks K inside [k_min, k_max]."""
+    k_max: int = 8                   # draft-length ceiling
+    k_min: int = 1                   # floor > 0 keeps the signal alive —
+                                     # K=0 would draft nothing and the
+                                     # acceptance stream would go silent
+    k_init: int = 4
+    ngram_max: int = 3               # longest suffix n-gram matched first
+    ngram_min: int = 1
+    adapt_window: int = 16           # recent steps in the acceptance window
+    adapt_min_drafted: int = 8       # don't adapt on fewer drafted tokens
+    accept_hi: float = 0.7           # grow K above this acceptance rate
+    accept_lo: float = 0.3           # shrink K below it
+
+
+class AdaptiveKController:
+    """Per-step draft-length selector, driven by the SAME
+    `StepObservation` stream the dual-precision controller reads: the
+    engine reports how many draft tokens the last step verified and how
+    many the model confirmed, and K walks toward the regime where
+    verification work is actually paying out (DISCO, arXiv 2406.*;
+    llmserve FUTURE item 4)."""
+
+    def __init__(self, cfg: SpeculationConfig):
+        assert 0 < cfg.k_min <= cfg.k_init <= cfg.k_max
+        self.cfg = cfg
+        self.k = cfg.k_init
+        self._recent = collections.deque(maxlen=cfg.adapt_window)
+        self.history: list[int] = []
+
+    def acceptance_rate(self) -> float:
+        drafted = sum(d for d, _ in self._recent)
+        return sum(a for _, a in self._recent) / drafted if drafted else 0.0
+
+    def decide(self, obs: StepObservation) -> int:
+        if obs.spec_drafted:
+            self._recent.append((obs.spec_drafted, obs.spec_accepted))
+        drafted = sum(d for d, _ in self._recent)
+        if drafted >= self.cfg.adapt_min_drafted:
+            rate = self.acceptance_rate()
+            if rate >= self.cfg.accept_hi:
+                self.k = min(self.k + 1, self.cfg.k_max)
+            elif rate <= self.cfg.accept_lo:
+                self.k = max(self.k - 1, self.cfg.k_min)
+        self.history.append(self.k)
+        return self.k

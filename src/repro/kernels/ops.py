@@ -89,22 +89,32 @@ def matmul_nested_fp8(x_q: jax.Array, upper: jax.Array, x_scale: jax.Array,
                       *, backend: str | None = None,
                       block=(128, 128, 256), out_dtype=jnp.float32,
                       acc_dtype=jnp.float32) -> jax.Array:
-    """FP8-mode GEMM: x_q (..., K) e4m3 @ upper (K, N) -> (..., N)."""
+    """FP8-mode GEMM: x_q (..., K) e4m3 @ upper (K, N) -> (..., N).
+
+    x_scale: scalar per-tensor dequant scale, or (M, 1) per-token row
+    scales (M = prod of x_q's leading dims). The pallas kernel takes a
+    scalar only, so per-token scales dequant OUTSIDE the kernel — the
+    scale is a linear factor on the accumulator, so the results are
+    identical either way."""
     backend = backend or default_backend()
     k, n = upper.shape
     lead = x_q.shape[:-1]
     x2d = x_q.reshape(-1, k)
+    per_token = getattr(x_scale, "ndim", 0) >= 2
     if backend == "ref":
         out = _ref.nestedfp8_matmul_ref(x2d, upper, x_scale, acc_dtype=acc_dtype)
     else:
         interp = backend == "pallas_interpret"
         up = _pad_to(_pad_to(upper, block[2], 0), block[1], 1)
+        ks = jnp.float32(1.0) if per_token else x_scale
         out = _run_2d(
             x2d,
-            lambda xp: nestedfp8_matmul(xp, up, jnp.atleast_1d(x_scale),
+            lambda xp: nestedfp8_matmul(xp, up, jnp.atleast_1d(ks),
                                         block=block, out_dtype=jnp.float32,
                                         interpret=interp),
             n, block)
+        if per_token:
+            out = out * x_scale
     return out.astype(out_dtype).reshape(*lead, n)
 
 

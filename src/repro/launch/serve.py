@@ -28,6 +28,9 @@ def main() -> int:
                     help="shared prefix tokens prepended to every request "
                          "(exercises COW prefix caching)")
     ap.add_argument("--no-prefix-cache", action="store_true")
+    ap.add_argument("--speculate", action="store_true",
+                    help="n-gram speculative decoding (greedy outputs are "
+                         "bit-exact vs off; summary gains spec_* fields)")
     ap.add_argument("--max-new", type=int, default=16)
     ap.add_argument("--policy", default="dual",
                     choices=["dual", "fp16", "fp8"])
@@ -63,7 +66,8 @@ def main() -> int:
 
     eng = Engine(cfg, sparams, n_slots=args.slots, capacity=args.capacity,
                  controller=controller, forced_mode=forced,
-                 prefix_cache=not args.no_prefix_cache)
+                 prefix_cache=not args.no_prefix_cache,
+                 speculate=args.speculate or None)
     rng = np.random.RandomState(args.seed)
     sys_prompt = list(rng.randint(1, cfg.vocab_size,
                                   args.system_prompt_len))
@@ -84,6 +88,11 @@ def main() -> int:
         "prefix_hit_rate": round(ps["hit_rate"], 3),
         "blocks_saved": ps["blocks_saved"],
         "window_reclaimed_blocks": eng.stats["window_reclaimed_blocks"],
+        **({"spec_acceptance_rate":
+                round(eng.spec_stats()["acceptance_rate"], 3),
+            "spec_tokens_per_dispatch":
+                round(eng.spec_stats()["tokens_accepted_per_dispatch"], 3)}
+           if args.speculate else {}),
     }))
     return 0 if len(fin) == args.requests else 1
 

@@ -35,6 +35,13 @@ class Runtime:
     dtype: Any = jnp.bfloat16    # activation dtype
     fast_accum: bool = False     # bf16 cross-shard partial sums (serving
                                  # hillclimb Z4: halves TP all-reduce bytes)
+    act_quant: str = "per_tensor"
+    # fp8 activation-scale granularity (core.linear): "per_tensor" is the
+    # paper's scheme; the serving engine sets "per_token" so each token's
+    # fp8 result is independent of what shares the dispatch — continuous
+    # batching and speculative C=K+1 chunks reshape the batch every
+    # step, and batch-coupled rounding would make generation depend on
+    # co-batched requests (and break spec-on/off bit-exactness).
     attn_backend: str | None = None
     # paged-decode attention backend: "pallas" routes single-token paged
     # decode over byte-planar (NestedKV) GQA caches through the
@@ -97,7 +104,8 @@ def apply_linear(rt: Runtime, p, x: jax.Array) -> jax.Array:
     if isinstance(p, NestedLinearParams):
         mode = "fp8" if rt.mode == "fp8" else "fp16"
         return nested_linear(p, x, mode=mode, backend=rt.backend,
-                             out_dtype=rt.dtype, fast_accum=rt.fast_accum)
+                             out_dtype=rt.dtype, fast_accum=rt.fast_accum,
+                             act_quant=rt.act_quant)
     y = jax.lax.dot_general(
         x.astype(rt.dtype), p["w"].astype(rt.dtype),
         (((x.ndim - 1,), (0,)), ((), ())),
@@ -389,6 +397,14 @@ def attention(rt: Runtime, p: dict, cfg, x: jax.Array, *,
             msz = rt.mesh.shape["model"] \
                 if rt.mesh is not None and "model" in rt.mesh.axis_names \
                 else 1
+            # x.shape[1] == 1 also routes speculative VERIFICATION
+            # chunks (C=K+1 per-row drafts) to the ref gather path
+            # below — the kernel is single-query-per-row by
+            # construction. Speculation therefore still works under
+            # attn_backend="pallas", but draftful steps verify through
+            # the ref path (kernel-vs-ref rounding ~1e-6), so the
+            # bit-exact speculation-on/off sweeps run on the ref
+            # backend.
             if rt.attn_backend == "pallas" and x.shape[1] == 1 \
                     and hkv % msz == 0:
                 # single-token decode over planar blocks: hand the block

@@ -754,7 +754,8 @@ def prefill(rt, params, cfg, batch, *, capacity: int | None = None,
 
 def paged_step(rt, params, cfg, tokens, caches, block_tables, *,
                q_offset, kv_len, block_size: int, logit_position=None,
-               slot=None, return_logits: bool = False):
+               slot=None, return_logits: bool = False,
+               sample_all: bool = False):
     """One step over a descriptor-shaped paged cache — covers BOTH
     batched decode (C=1 across all rows) and chunked prefill (a batch of
     ragged right-padded chunk rows, C=chunk bucket) for every
@@ -790,6 +791,18 @@ def paged_step(rt, params, cfg, tokens, caches, block_tables, *,
                   engine's one-dispatch hot path pulls B int32s back to
                   host instead of a (B, vocab) float matrix. True is the
                   escape hatch for tests/tools that inspect logits.
+    sample_all:   True returns the greedy argmax at EVERY chunk column —
+                  (B, C) int32 (or (B, C, V) logits with return_logits)
+                  instead of the single `logit_position` selection. This
+                  is the speculative-decoding verification mode: column
+                  j's argmax is the greedy continuation after consuming
+                  the chunk up to j, so the engine's fused accept-select
+                  can take the longest draft prefix the model confirms
+                  without any extra dispatch. Per-column values are
+                  bit-identical to what C=1 decode at that position
+                  produces (row/column-parallel GEMMs + per-query paged
+                  attention — same property the chunked-prefill fusion
+                  relies on).
 
     Returns (next_ids (B,) int32 | logits (B, V), new caches). Pad
     columns write to the trash block and their outputs are never read;
@@ -866,6 +879,11 @@ def paged_step(rt, params, cfg, tokens, caches, block_tables, *,
         new_caches = {"ssm": new_ssm}
         if new_shared is not None:
             new_caches["shared"] = new_shared
+    if sample_all:
+        logits = lm_logits(rt, params, cfg, h)       # (B, C, V)
+        if return_logits:
+            return logits, new_caches
+        return jnp.argmax(logits, -1).astype(jnp.int32), new_caches
     if logit_position is None:
         hsel = h[:, -1:]
     else:

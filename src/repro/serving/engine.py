@@ -59,6 +59,28 @@ order, so shared physical blocks are transparent to `paged_step` and the
 planar decode kernel alike. `prefix_cache_stats()` reports hit-rate and
 blocks saved.
 
+N-gram speculative decoding (opt-in via `speculate=`): each decode row
+may carry up to K drafted tokens proposed by a host-side suffix n-gram
+match over the request's OWN token history (serving/speculate.py — no
+draft model, no extra dispatch). The batched decode then runs as one
+ragged C=K+1 `paged_step` chunk with per-column greedy argmax
+(`sample_all=True`), and the longest accepted draft prefix is selected
+ON DEVICE next to the fused sampling — the end-of-step sync pulls a
+single packed `[ids | n_accepted]` array, so speculation adds zero host
+syncs. Rejected draft positions are rolled back by pure block
+bookkeeping (`BlockManager.truncate`: rejected writes only ever land in
+COW-exclusive unregistered tail blocks, so garbage beyond the accepted
+length is masked by kv_len and overwritten before it could become
+valid), and the per-row draft length adapts to the measured acceptance
+rate (`core.policy.AdaptiveKController` on the same `StepObservation`
+stream the precision controller reads). Drafting is opportunistic and
+NEVER preempts: draft extensions are clamped to `max_coverable` and
+given back (truncate) if their COW fork cannot complete. Greedy outputs
+are BIT-IDENTICAL with speculation on or off — drafts only decide how
+many tokens one dispatch confirms, never which tokens. Recurrent
+descriptors reject speculation (slot-resident SSM state cannot roll
+back).
+
 Greedy sampling; attention-family chunk lengths are bucketed and jit
 caches key on (mode, bucket) with positions and slot index passed as
 traced arguments, so distinct prompt lengths share one executable per
@@ -112,11 +134,13 @@ import numpy as np
 
 from repro.configs.base import ArchConfig
 from repro.core.compat import mesh_context
-from repro.core.policy import DualPrecisionController, StepObservation
+from repro.core.policy import (AdaptiveKController, DualPrecisionController,
+                               SpeculationConfig, StepObservation)
 from repro.models import model as M
 from repro.models.layers import Runtime
 from repro.serving import shard as SHARD
 from repro.serving.kvcache import BlockManager, SlotManager
+from repro.serving.speculate import NgramProposer
 
 
 @dataclasses.dataclass
@@ -125,6 +149,10 @@ class Request:
     tokens: list[int]
     max_new: int
     arrival_s: float = 0.0
+    # generation stops the step AFTER one of these ids is emitted (the
+    # stop token itself is kept in `output`, EOS-style); an accepted
+    # speculative run is cut at the first stop token mid-run
+    stop_tokens: tuple[int, ...] = ()
     # filled by the engine:
     output: list[int] = dataclasses.field(default_factory=list)
     first_token_s: float | None = None
@@ -165,7 +193,8 @@ class Engine:
                  block_size: int = 16,
                  n_blocks: int | None = None, chunk_tokens: int = 256,
                  prefix_cache: bool = True, window_reclaim: bool = True,
-                 debug_invariants: bool = False, mesh=None):
+                 debug_invariants: bool = False, mesh=None,
+                 speculate: SpeculationConfig | bool | None = None):
         # mesh (launch.mesh.make_serving_mesh): drive an N-chip
         # tensor-parallel mesh as ONE logical device — weights and the
         # paged pool are committed to sharded layouts here (serving/
@@ -198,6 +227,26 @@ class Engine:
         # block) but would be absorbed into SSM state: recurrent
         # families prefill with exact-length chunks instead of buckets
         self._pad_chunks = not self.desc.slot_planes
+        # n-gram speculative decoding (module docstring): True picks the
+        # default SpeculationConfig; rejected-draft rollback is pure
+        # block bookkeeping, which slot-resident recurrent state cannot
+        # provide — advancing an SSM recurrence is irreversible
+        if speculate:
+            if self.desc.slot_planes:
+                raise ValueError(
+                    "speculative decoding requires rolling back rejected "
+                    "positions; slot-resident recurrent state (ssm/hybrid "
+                    "descriptors) cannot be truncated")
+            self._spec = speculate if isinstance(speculate, SpeculationConfig) \
+                else SpeculationConfig()
+            self._proposer = NgramProposer(self._spec)
+            self._spec_k = AdaptiveKController(self._spec)
+        else:
+            self._spec = None
+            self._proposer = None
+            self._spec_k = None
+        self._spec_cache: dict[tuple[str, int], Any] = {}
+        self._last_spec = (0, 0)     # (drafted, accepted) of the last step
         self.queue: collections.deque[Request] = collections.deque()
         self.active: dict[int, Request] = {}
         self.prefilling: dict[int, _Prefill] = {}
@@ -210,12 +259,25 @@ class Engine:
                       # plus host->device bytes for step inputs (block
                       # tables are counted by BlockManager separately)
                       "prefill_dispatches": 0, "decode_dispatches": 0,
-                      "aux_dispatches": 0, "h2d_bytes": 0}
+                      "aux_dispatches": 0, "h2d_bytes": 0,
+                      # speculative decoding (spec_stats() / bench
+                      # spec/* rows): decode_rows counts row-dispatches,
+                      # decode_tokens the tokens they emitted — their
+                      # ratio is tokens-accepted-per-dispatch (1.0
+                      # without speculation, >1 iff drafts accepted)
+                      "spec_dispatches": 0, "spec_drafted": 0,
+                      "spec_accepted": 0, "decode_rows": 0,
+                      "decode_tokens": 0}
         self._last_step_ms: float | None = None
         # attn_backend="pallas" serves planar GQA decode through the
         # block-table scalar-prefetch kernel (layers.attention "paged");
-        # anything it cannot serve falls back to the ref gather path
+        # anything it cannot serve falls back to the ref gather path.
+        # act_quant="per_token": fp8 generation must be batch-invariant
+        # under continuous batching (and speculative verification chunks)
+        # — per-tensor dynamic scales would couple co-batched tokens'
+        # rounding (Runtime docstring).
         self._rts = {m: Runtime(mode=m, backend=backend, dtype=jnp.float32,
+                                act_quant="per_token",
                                 attn_backend=None if attn_backend == "ref"
                                 else attn_backend, mesh=mesh)
                      for m in ("fp16", "fp8")}
@@ -330,6 +392,24 @@ class Engine:
                 "cow_forks": ps["cow_forks"],
                 "evictions": ps["evictions"]}
 
+    def spec_stats(self) -> dict:
+        """Speculation effectiveness. `tokens_accepted_per_dispatch` is
+        the per-row mean tokens confirmed by one decode dispatch: exactly
+        1.0 without speculation, > 1 iff drafts were accepted. All ratios
+        guard their denominators — a trace that never decoded (or never
+        drafted) reports 0.0, it does not raise."""
+        s = self.stats
+        return {"enabled": self._spec is not None,
+                "spec_dispatches": s["spec_dispatches"],
+                "drafted": s["spec_drafted"],
+                "accepted": s["spec_accepted"],
+                "acceptance_rate": s["spec_accepted"] / s["spec_drafted"]
+                if s["spec_drafted"] else 0.0,
+                "tokens_accepted_per_dispatch":
+                s["decode_tokens"] / s["decode_rows"]
+                if s["decode_rows"] else 0.0,
+                "k": self._spec_k.k if self._spec_k else 0}
+
     # -- mode selection -------------------------------------------------------
     def _mode(self, decode_tokens: int, prefill_tokens: int,
               free_block_frac: float | None = None) -> str:
@@ -371,14 +451,15 @@ class Engine:
         mode = self._mode(len(self.active),
                           sum(take for _, _, take in plan),
                           free_block_frac=self.blocks.free_block_frac())
-        # pending: (req, output index, device ids, row) patched at the
-        # end-of-step sync; fresh: (slot, device ids, row) prefills that
-        # completed this step and decode below with a device-held token
-        pending: list[tuple[Request, int, Any, int]] = []
+        # pending: (req, output index, device ids, row, slot) patched —
+        # and EOS-checked — at the end-of-step sync; fresh: (slot,
+        # device ids, row) prefills that completed this step and decode
+        # below with a device-held token
+        pending: list[tuple[Request, int, Any, int, int]] = []
         fresh: list[tuple[int, Any, int]] = []
         chunk_ids = self._run_chunks(mode, plan, pending, fresh)
-        decode_ids = self._decode_paged(mode, chunk_ids, fresh)
-        self._finalize_step(mode, pending, decode_ids)
+        decode_ids, drafts = self._decode_paged(mode, chunk_ids, fresh)
+        self._finalize_step(mode, pending, decode_ids, drafts)
         self._sample_peak()
         # wall time of this step feeds the controller's p90 tracker on the
         # NEXT decision (measured-latency fallback to FP8, paper §3.2)
@@ -503,6 +584,36 @@ class Engine:
                                     block_size=bs, logit_position=logit_pos)
             self._fused_cache[key] = jax.jit(fn, donate_argnums=(1,))
         return self._fused_cache[key]
+
+    def _spec_fn(self, mode: str, cb: int):
+        """Speculative verification executable: the batched decode as a
+        ragged C=cb chunk (column 0 the pending token, columns 1..K the
+        drafts, pad columns masked by per-row kv_len), per-column greedy
+        argmax (`sample_all`), and the longest-accepted-prefix selection
+        FUSED next to it — draft j survives iff it matches the argmax
+        after position j-1 AND every earlier draft survived (the
+        cumprod). Returns ONE packed (B, cb+1) int32 array `[ids |
+        n_accepted]` so the end-of-step sync stays a single pull; the jit
+        cache keys on (mode, draft-bucket) via `_bucket`, exactly like
+        the prefill executables."""
+        key = (mode, cb)
+        if key not in self._spec_cache:
+            rt, cfg, bs = self._rts[mode], self.cfg, self.block_size
+
+            def fn(p, caches, toks, tables, qo, kvl, dlen):
+                ids, new_caches = self._paged_step(
+                    rt, p, cfg, toks, caches, tables, q_offset=qo,
+                    kv_len=kvl, block_size=bs, sample_all=True)
+                # ids[:, j] = greedy successor of position qo+j; draft
+                # toks[:, j] (the input at position qo+j) is confirmed
+                # iff it equals ids[:, j-1]; dlen masks pad columns
+                m = (ids[:, :-1] == toks[:, 1:]) \
+                    & (jnp.arange(1, cb)[None, :] <= dlen[:, None])
+                n_acc = jnp.cumprod(m.astype(jnp.int32), axis=1).sum(axis=1)
+                return jnp.concatenate(
+                    [ids, n_acc[:, None]], axis=1), new_caches
+            self._spec_cache[key] = jax.jit(fn, donate_argnums=(1,))
+        return self._spec_cache[key]
 
     def _apply_cow(self, triples: list[tuple[int, int, int]]) -> None:
         """Materialize COW forks: copy each forked block's bytes — the
@@ -637,7 +748,7 @@ class Engine:
             return
         req = st.req
         req.output.append(_PENDING)
-        pending.append((req, len(req.output) - 1, ids, row))
+        pending.append((req, len(req.output) - 1, ids, row, idx))
         now = self.clock()
         if req.first_token_s is None:
             req.first_token_s = now
@@ -665,24 +776,82 @@ class Engine:
         self.lens[victim] = 0
         self.queue.appendleft(req)
 
+    def _retire(self, idx: int, now: float) -> None:
+        req = self.active.pop(idx)
+        req.finished_s = now
+        self.finished.append(req)
+        self.blocks.release(idx)
+        if self.slot_state is not None:
+            self.slot_state.release(idx)
+        self.lens[idx] = 0
+
     def _maybe_retire(self, idx: int, now: float) -> None:
         req = self.active[idx]
         # NOTE length >= capacity (not length+1): position `length` is the
         # next write target, so a row is live while length < capacity —
         # the old `+1` retired sequences one writable position early.
-        if len(req.output) >= req.max_new or self.lens[idx] >= self.capacity:
-            req.finished_s = now
-            self.finished.append(self.active.pop(idx))
-            self.blocks.release(idx)
-            if self.slot_state is not None:
-                self.slot_state.release(idx)
-            self.lens[idx] = 0
+        # Stop-token retirement reads the LAST emitted token only: the
+        # speculative multi-token path already cuts its emission at the
+        # first stop token, so output[-1] is the one place EOS can live
+        # (_PENDING placeholders are not yet tokens and never match).
+        eos = bool(req.stop_tokens) and bool(req.output) \
+            and req.output[-1] != _PENDING \
+            and req.output[-1] in req.stop_tokens
+        if eos or len(req.output) >= req.max_new \
+                or self.lens[idx] >= self.capacity:
+            self._retire(idx, now)
+
+    def _draft(self) -> dict[int, list[int]]:
+        """Propose n-gram drafts per active row and secure KV coverage
+        for their writes at positions L+1..L+K. Drafting NEVER preempts:
+        the draft is clamped to what the pool can cover without evicting
+        anyone (`max_coverable`), and if the COW fork for the extension
+        cannot complete the extension is given back (`truncate`) and the
+        row runs as a plain one-token decode. Rows whose pending input
+        token still lives on device (fresh prefills) cannot be matched
+        against and draft nothing this step."""
+        k = self._spec_k.decide(StepObservation(
+            batch_tokens=max(len(self.active), 1),
+            queue_depth=len(self.queue),
+            measured_step_ms=self._last_step_ms,
+            spec_drafted=self._last_spec[0],
+            spec_accepted=self._last_spec[1]))
+        drafts: dict[int, list[int]] = {}
+        bm = self.blocks
+        for idx, req in self.active.items():
+            if req.output[-1] == _PENDING:
+                continue
+            L = int(self.lens[idx])
+            # position L's write and this step's guaranteed token are
+            # already budgeted — clamp drafts to what's left of the
+            # output budget and the cache capacity beyond them
+            budget = min(k, req.max_new - len(req.output) - 1,
+                         self.capacity - L - 1)
+            if budget <= 0:
+                continue
+            d = self._proposer.propose(req.tokens + req.output, budget)
+            if d:
+                d = d[:bm.max_coverable(idx, L + 1, len(d))]
+            if not d:
+                continue
+            ok = bm.ensure(idx, L + 1 + len(d))
+            assert ok, idx           # max_coverable guarantees coverage
+            pairs = bm.cow_for_write(idx, L + 1, L + 1 + len(d))
+            if pairs is None:
+                bm.truncate(idx, L + 1)
+                continue
+            self._apply_cow(pairs)
+            drafts[idx] = d
+        return drafts
 
     def _decode_paged(self, mode: str, chunk_ids, fresh):
-        """Dispatch the batched decode; returns the device array of
-        sampled ids (None when nothing is active). Host bookkeeping for
-        the decoded tokens happens in `_finalize_step` after the single
-        end-of-step sync."""
+        """Dispatch the batched decode; returns (device ids, drafts) —
+        ids None when nothing is active, drafts None for a plain
+        one-token step. With speculation enabled and at least one row
+        drafting, the decode runs through `_spec_fn` as a ragged C=K+1
+        chunk instead (same single dispatch, packed [ids | n_accepted]
+        result). Host bookkeeping for the decoded tokens happens in
+        `_finalize_step` after the single end-of-step sync."""
         # grow each active row's block table to cover the incoming write
         # at position lens[idx] and COW-fork it if shared; preempt
         # youngest sequences on exhaustion
@@ -700,15 +869,26 @@ class Engine:
                 self._preempt(victim)
         self._sample_peak()                  # allocation peak, pre-retire
         if not self.active:
-            return None
-        tokens = np.zeros((self.n_slots, 1), np.int32)
+            return None, None
+        drafts = self._draft() if self._spec is not None else {}
+        kmax = max(map(len, drafts.values()), default=0)
+        # no row drafted: dispatch the plain C=1 executable — identical
+        # to speculation-off (under attn_backend="pallas" it keeps the
+        # single-query decode kernel, which the C>1 chunk cannot use)
+        cb = _bucket(kmax + 1, 1) if kmax else 1
+        tokens = np.zeros((self.n_slots, cb), np.int32)
         q_off = np.zeros(self.n_slots, np.int32)
         kvl = np.zeros(self.n_slots, np.int32)   # 0 disables inactive rows
+        dlen = np.zeros(self.n_slots, np.int32)
         for idx, req in self.active.items():
             if req.output[-1] != _PENDING:
                 tokens[idx, 0] = req.output[-1]
+            d = drafts.get(idx)
+            if d:
+                tokens[idx, 1:1 + len(d)] = d
+                dlen[idx] = len(d)
             q_off[idx] = self.lens[idx]
-            kvl[idx] = self.lens[idx] + 1
+            kvl[idx] = self.lens[idx] + 1 + dlen[idx]
         toks = self._h2d(tokens)
         fresh = [(s, a, r) for s, a, r in fresh if s in self.active]
         if fresh and chunk_ids is not None:
@@ -727,36 +907,103 @@ class Engine:
                     toks, self._h2d(np.asarray([s], np.int32)), a,
                     self._h2d(np.asarray([r], np.int32)))
                 self.stats["aux_dispatches"] += 1
+        if kmax:
+            ids, self.caches = self._spec_fn(mode, cb)(
+                self.params, self.caches, toks, self.blocks.device_tables(),
+                self._h2d(q_off), self._h2d(kvl), self._h2d(dlen))
+            self.stats["decode_dispatches"] += 1
+            self.stats["spec_dispatches"] += 1
+            return ids, drafts
         ids, self.caches = self._decode[mode](
             self.params, self.caches, toks, self.blocks.device_tables(),
             self._h2d(q_off), self._h2d(kvl))
         self.stats["decode_dispatches"] += 1
-        return ids
+        return ids, None
 
     # nfp: sync-point
-    def _finalize_step(self, mode: str, pending, decode_ids) -> None:
+    def _finalize_step(self, mode: str, pending, decode_ids,
+                       drafts=None) -> None:
         """The step's ONLY device->host sync: pull the sampled token ids
         (a few int32s, not logits), patch pending prefill outputs, then
         run decode bookkeeping — commit() must hash REAL token values,
-        so it happens strictly after the patch."""
+        so it happens strictly after the patch.
+
+        A patched pending token that is a stop token retires its row
+        HERE, before decode bookkeeping: the row's same-step decode
+        result is discarded (its position-L write went to an exclusive
+        unregistered tail block, so releasing is clean) — previously a
+        first-token EOS decoded on to max_new.
+
+        Speculative steps (`drafts` non-None) emit per row the accepted
+        draft prefix plus the model's next token — `[ids | n_acc]`
+        packed by `_spec_fn` — cut at the first stop token and the
+        max_new budget; `BlockManager.truncate` gives back the blocks
+        covering rejected positions, and one commit() both registers any
+        newly-filled blocks (a multi-token emission can fill several)
+        and advances the length. The LAST emitted token is never in the
+        cache — it is the next step's input, exactly as in plain
+        decode."""
         nxt = None if decode_ids is None else np.asarray(decode_ids)
-        for req, pos, ids, row in pending:
+        now = self.clock()
+        for req, pos, ids, row, idx in pending:
             req.output[pos] = int(np.asarray(ids)[row])
+            if req.output[pos] in req.stop_tokens \
+                    and self.active.get(idx) is req:
+                self._retire(idx, now)
         if nxt is None:
             return
-        now = self.clock()
+        if drafts is None:
+            for idx, req in list(self.active.items()):
+                self.lens[idx] += 1
+                n = int(self.lens[idx])
+                if n % self.block_size == 0:
+                    # tail block just filled: register it in the prefix
+                    # index (generated content is reusable too — replays
+                    # after preemption and shared multi-turn history)
+                    self.blocks.commit(idx, n,
+                                       (req.tokens + req.output)[:n])
+                else:
+                    self.blocks.set_length(idx, n)
+                req.output.append(int(nxt[idx]))
+                req.token_times.append(now)
+                req.modes.append(mode)
+                self.stats["decode_rows"] += 1
+                self.stats["decode_tokens"] += 1
+                self._maybe_retire(idx, now)
+            if self._spec is not None:
+                self._last_spec = (0, 0)
+            return
+        drafted_total = accepted_total = 0
         for idx, req in list(self.active.items()):
-            self.lens[idx] += 1
-            n = int(self.lens[idx])
-            if n % self.block_size == 0:
-                # tail block just filled: register it in the prefix index
-                # (generated content is reusable too — replays after
-                # preemption and shared multi-turn history hit it)
-                self.blocks.commit(idx, n, (req.tokens + req.output)[:n])
-            else:
-                self.blocks.set_length(idx, n)
-            req.output.append(int(nxt[idx]))
-            req.token_times.append(now)
-            req.modes.append(mode)
+            d = drafts.get(idx, ())
+            n_acc = int(nxt[idx, -1]) if d else 0
+            out = [int(t) for t in nxt[idx, :n_acc + 1]]
+            drafted_total += len(d)
+            accepted_total += n_acc
+            # EOS stops an accepted run MID-RUN: everything after the
+            # first stop token is discarded (never emitted), and the
+            # output budget bounds the emission the same way
+            for j, t in enumerate(out):
+                if t in req.stop_tokens:
+                    out = out[:j + 1]
+                    break
+            out = out[:req.max_new - len(req.output)]
+            new_n = int(self.lens[idx]) + len(out)
+            # rollback: drop the blocks covering rejected positions
+            # (their writes landed in COW-exclusive unregistered blocks;
+            # what survives inside the kept tail block beyond new_n is
+            # masked by kv_len and overwritten before it can be read)
+            self.blocks.truncate(idx, new_n)
+            self.blocks.commit(idx, new_n,
+                               (req.tokens + req.output + out)[:new_n])
+            self.lens[idx] = new_n
+            req.output.extend(out)
+            req.token_times.extend([now] * len(out))
+            req.modes.extend([mode] * len(out))
+            self.stats["decode_rows"] += 1
+            self.stats["decode_tokens"] += len(out)
             self._maybe_retire(idx, now)
+        self.stats["spec_drafted"] += drafted_total
+        self.stats["spec_accepted"] += accepted_total
+        self._last_spec = (drafted_total, accepted_total)
 

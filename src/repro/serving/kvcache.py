@@ -680,6 +680,62 @@ class BlockManager:
         assert seq is not None and n_tokens <= len(seq.blocks) * self.block_size
         seq.length = n_tokens
 
+    def truncate(self, idx: int, n_tokens: int) -> int:
+        """Un-write the sequence's tail back to `n_tokens` — the
+        speculative-decoding rollback: verification writes K+1 positions
+        optimistically, and the rejected suffix must hand its block-table
+        coverage back.
+
+        Every block whose logical span lies entirely at/after `n_tokens`
+        is dropped from every window group through the normal release
+        machinery: shared blocks survive for their other holders
+        (decref), registered exclusively-held blocks park in the LRU
+        prefix cache (their content is fully committed and still
+        attachable), unregistered ones return to the group's free list.
+        No cache bytes are touched — reads beyond `seq.length` are
+        masked by `kv_len`, and the next write at a kept position simply
+        lands over the garbage.
+
+        The committed-hash chain is cut back to the full blocks still
+        covered, and a kept tail block that the cut partially
+        invalidates is EVICTED from the prefix index: future writes will
+        land below its registered content, and a registered block's
+        bytes must never change (writers into shared blocks still
+        COW-fork as usual). Slide-freed leading holes are never
+        resurrected — truncation only ever shortens tables, and the
+        slide point is clamped to the new block count. Returns the
+        number of group-blocks dropped."""
+        seq = self.seqs[idx]
+        assert seq is not None and n_tokens >= 0, idx
+        bs = self.block_size
+        nb = -(-n_tokens // bs)              # blocks still covered
+        nfull = n_tokens // bs               # ... of which fully valid
+        dropped = 0
+        for gi, g in enumerate(seq.groups):
+            while len(g.blocks) > nb:
+                j = len(g.blocks) - 1
+                b = g.blocks.pop()
+                if b != TRASH_BLOCK:         # below-slide holes stay holes
+                    self._release_block(gi, b)
+                    self._set_table(gi, idx, j, TRASH_BLOCK)
+                    dropped += 1
+            if len(g.hashes) > nfull:
+                del g.hashes[nfull:]
+                if nfull < nb:
+                    # the kept tail block was committed full but is now
+                    # partially un-written: evict its index entry before
+                    # any future write can diverge from the registered
+                    # content (the physical bytes are still intact for
+                    # every current sharer — their writes COW-fork)
+                    b = g.blocks[nb - 1]
+                    h = self._hash_of.pop((gi, b), None)
+                    if h is not None:
+                        del self._index[(gi, h)]
+                        self.prefix_stats["evictions"] += 1
+            g.slid = min(g.slid, nb)
+        seq.length = min(seq.length, n_tokens)
+        return dropped
+
     def release(self, idx: int) -> None:
         """Decref (not free) every block the sequence holds in any
         group — shared blocks survive for their other holders,

@@ -62,12 +62,16 @@ def shard_serving_params(params, cfg, mesh):
 
 def sharded_paged_step(mesh, rt, params, cfg, tokens, caches, block_tables,
                        *, q_offset, kv_len, block_size, logit_position=None,
-                       slot=None, return_logits: bool = False):
+                       slot=None, return_logits: bool = False,
+                       sample_all: bool = False):
     """`model.paged_step` as a mesh program: same signature (after the
     leading mesh), same semantics, one logical dispatch. Small per-step
     operands are pinned replicated so partitioning lives entirely in the
     weight/pool operands; the sampled ids come back replicated, making
-    the engine's single end-of-step sync a local host read."""
+    the engine's single end-of-step sync a local host read.
+    `sample_all` (speculative verification: per-column argmax over a
+    C=K+1 chunk) passes straight through — the (B, C) ids it returns are
+    pinned replicated exactly like the (B,) decode ids."""
     rep = NamedSharding(mesh, P())
 
     def pin(x):
@@ -78,5 +82,5 @@ def sharded_paged_step(mesh, rt, params, cfg, tokens, caches, block_tables,
         q_offset=pin(q_offset), kv_len=pin(kv_len), block_size=block_size,
         logit_position=None if logit_position is None
         else pin(logit_position),
-        slot=slot, return_logits=return_logits)
+        slot=slot, return_logits=return_logits, sample_all=sample_all)
     return jax.lax.with_sharding_constraint(out, rep), new_caches

@@ -1,0 +1,73 @@
+"""Draft proposal for n-gram speculative decoding.
+
+The paged engine verifies K drafted tokens per decode row in ONE ragged
+C=K+1 `paged_step` chunk (serving/engine.py `_spec_fn`), so all the
+"speculation" that happens here is host-side string matching over token
+ids — there is no second model, no extra dispatch, and nothing on this
+path may touch a device array (the proposer is a repro-lint hot root:
+a host sync here would serialize every decode step).
+
+The proposer is prompt-lookup decoding (arXiv 2304.04487 / 2311.08252
+lineage): LLM output is self-similar — retrieval answers quote the
+prompt, code repeats identifiers, chat repeats phrasing — so the most
+recent occurrence of the current suffix n-gram in the request's own
+history (prompt + generated tokens) is a cheap, surprisingly accurate
+predictor of what comes next. Greedy verification then makes the
+emitted stream BIT-IDENTICAL to non-speculative decoding: drafts only
+ever decide how many tokens one dispatch confirms, never which tokens.
+"""
+
+from __future__ import annotations
+
+from repro.core.policy import SpeculationConfig
+
+
+class NgramProposer:
+    """Suffix n-gram matcher over a request's own token history.
+
+    `propose` tries the longest configured suffix first (`ngram_max`
+    down to `ngram_min`): find the most recent EARLIER occurrence of
+    the history's n-token suffix and return the up-to-`k` tokens that
+    followed it. No match at any n returns [] — the engine then runs
+    that row as a plain C=1 decode, so a cold (non-repetitive) stream
+    costs nothing beyond this scan.
+
+    Pure host-side Python over int lists, O(ngram_max * len(history))
+    per row worst case; `propose` is registered with repro-lint's
+    hot-root sweep and must stay free of device work.
+    """
+
+    def __init__(self, cfg: SpeculationConfig | None = None):
+        self.cfg = cfg or SpeculationConfig()
+
+    def propose(self, history: list[int], k: int) -> list[int]:
+        """Draft up to `k` tokens following `history` (prompt + output
+        so far, most recent last); [] if no suffix n-gram recurs earlier
+        in the history.
+
+        Selection order: the most recent match of the LONGEST suffix
+        n-gram whose continuation is a full k tokens (recent repetitions
+        best reflect current phrasing); when every match of every n sits
+        too close to the history's end for that — the short-history
+        pure-loop case — fall back to the longest continuation seen, so
+        a tight repetition cycle still drafts the whole loop instead of
+        its final token."""
+        if k <= 0:
+            return []
+        cfg = self.cfg
+        h = history
+        n_hist = len(h)
+        best: list[int] = []
+        for n in range(min(cfg.ngram_max, n_hist - 1), cfg.ngram_min - 1, -1):
+            suffix = h[n_hist - n:]
+            # scan backward over candidate match *ends*: most recent first
+            for end in range(n_hist - 1, n - 1, -1):
+                if h[end - n:end] == suffix:
+                    cand = h[end:end + k]
+                    if end + k <= n_hist:
+                        return cand
+                    if len(cand) > len(best):
+                        best = cand
+                    # earlier matches have longer continuations — keep
+                    # scanning before settling for a truncated draft
+        return best

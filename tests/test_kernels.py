@@ -105,6 +105,40 @@ class TestNestedFP8Kernel:
         denom = np.maximum(np.abs(truth), 1.0)
         assert np.median(np.abs(got - truth) / denom) < 0.05
 
+    def test_per_token_scales_ref_matches_pallas(self):
+        """(M, 1) row scales: the pallas wrapper dequants OUTSIDE the
+        kernel (scalar ks=1 inside) and must agree with the ref oracle's
+        native broadcast."""
+        x, w = _mk(64, 256, 128)
+        u, _ = nf.encode(w)
+        xq, scale = quant.quantize_act_per_token(x)
+        a = ops.matmul_nested_fp8(xq, u, scale, backend="ref")
+        b = ops.matmul_nested_fp8(xq, u, scale, backend="pallas_interpret",
+                                  block=(64, 128, 128))
+        np.testing.assert_allclose(np.asarray(a), np.asarray(b),
+                                   rtol=1e-5, atol=1e-4)
+
+    def test_per_token_row_independence(self):
+        """The serving engine's batch-invariance contract: a row's fp8
+        result must not change with the rest of the batch (per-tensor
+        scales fail this by construction)."""
+        x, w = _mk(8, 256, 128)
+        u, _ = nf.encode(w)
+
+        def run(xx):
+            from repro.core import linear
+            p = linear.NestedLinearParams.from_weights(w)
+            return np.asarray(linear.nested_linear(
+                p, xx, mode="fp8", backend="ref", act_quant="per_token",
+                out_dtype=jnp.float32))
+
+        full = run(x)
+        solo = run(x[:1] * 100.0)  # blow up row 0's amax...
+        batched = run(jnp.concatenate([x[:1] * 100.0, x[1:]], axis=0))
+        np.testing.assert_array_equal(batched[0], solo[0])
+        np.testing.assert_array_equal(batched[1:], full[1:],
+                                      "row 0's scale leaked into the batch")
+
     def test_fused_quant_variant_matches_unfused(self):
         x, w = _mk(128, 256, 128)
         u, _ = nf.encode(w)

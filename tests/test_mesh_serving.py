@@ -22,6 +22,7 @@ import jax
 import pytest
 
 from repro.configs import ARCHS
+from repro.core.policy import SpeculationConfig
 from repro.models import model as M
 from repro.models.convert import to_serving
 from repro.serving.engine import Engine, Request
@@ -77,6 +78,27 @@ class TestMeshParity:
             got, egot = _serve(cfg, sp, mesh, _reqs(), **kw)
             assert got == ref, mode
             assert egot.stats == eref.stats, (eref.stats, egot.stats)
+
+    def test_speculative_decode_bit_exact_under_mesh(self, tiny, mesh):
+        """N-gram speculation on the 4-chip mesh: accepted-prefix
+        selection and rollback read host state only, so the mesh run
+        must emit the same tokens as a plain (non-speculative)
+        single-device run — and actually accept drafts while doing it."""
+        cfg, sp = tiny
+        rep = [5, 6, 7, 8] * 6
+        prompts = [rep, list(range(3, 11))]
+        reqs = lambda: [Request(f"s{i}", list(p), max_new=8)
+                        for i, p in enumerate(prompts)]
+        for mode in ("fp16", "fp8"):
+            kw = dict(n_slots=4, capacity=96, forced_mode=mode,
+                      kv_planar=True, prefix_cache=False)
+            ref, _ = _serve(cfg, sp, None, reqs(), **kw)
+            got, egot = _serve(cfg, sp, mesh, reqs(),
+                               speculate=SpeculationConfig(ngram_min=1), **kw)
+            assert got == ref, mode
+            st = egot.spec_stats()
+            assert st["accepted"] > 0, st
+            assert st["tokens_accepted_per_dispatch"] > 1.0, st
 
     def test_prefill_stays_one_dispatch_under_mesh(self, tiny, mesh):
         """`prefill_dispatches_per_step == 1` survives sharding: a step

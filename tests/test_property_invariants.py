@@ -155,7 +155,13 @@ class TestBlockManagerCOWInvariants:
     refcounts and the free list stay conserved, no block is ever both
     free and in a live table, and a slide-freed block never reappears
     through `lookup_prefix`/`_match_plan` for the local group (it is
-    evicted from the index the moment its last holder slides past)."""
+    evicted from the index the moment its last holder slides past).
+    `truncate` (the speculative-decoding rollback) joins the soup as its
+    own op: dropped blocks are conserved through the normal release
+    machinery (shared blocks survive for their other holders), the
+    committed-hash chain never extends past the cut, slid holes stay
+    holes, and the device table mirror keeps matching the host tables —
+    check_invariants audits all of it after every op."""
 
     @pytest.mark.parametrize("kind", ["gqa", "mla", "hybrid", "swa"])
     @settings(max_examples=40, deadline=None)
@@ -221,6 +227,28 @@ class TestBlockManagerCOWInvariants:
                                for b in blks}
                     assert not (matched & slid_freed), \
                         "slide-freed block reappeared via prefix match"
+            elif op == 5 and live:
+                # speculative-rollback truncate to a random cut point:
+                # blocks must be conserved (freed/LRU-parked/kept-shared,
+                # never leaked — check_invariants recounts them), the
+                # hash chain must not outlive the cut, and slid holes
+                # must stay holes (also audited below)
+                idx = live[rng.randint(len(live))]
+                n = int(rng.randint(0, 33))
+                zero_ref_before = sum(map(len, bm._free)) \
+                    + sum(map(len, bm._lru))
+                dropped = bm.truncate(idx, n)
+                assert dropped >= 0
+                # releasing can only grow the zero-ref population (a
+                # shared drop decrefs without freeing)
+                assert sum(map(len, bm._free)) + sum(map(len, bm._lru)) \
+                    >= zero_ref_before
+                seq = bm.seqs[idx]
+                assert seq.length <= n
+                for g in seq.groups:
+                    assert len(g.blocks) <= -(-n // bm.block_size)
+                    assert len(g.hashes) <= n // bm.block_size
+                    assert g.slid <= len(g.blocks)
             bm.check_invariants()
             if sm is not None:
                 assert set(sm.active()) == set(live), \

@@ -84,6 +84,21 @@ class TestEngine:
         b = _greedy_reference(cfg, sparams, prompt, 4, mode="fp8")
         assert len(a) == len(b) == 4  # same shape; tokens may differ slightly
 
+    def test_stop_tokens_retire_early(self, tiny):
+        """EOS emission retires the request mid-stream: output is the
+        greedy prefix through the stop token, and the slot frees for
+        the next request (no speculation involved)."""
+        cfg, sparams = tiny
+        prompt = list(range(5, 13))
+        ref = _greedy_reference(cfg, sparams, prompt, 6)
+        eng = Engine(cfg, sparams, n_slots=1, capacity=64,
+                     forced_mode="fp16")
+        eng.submit(Request("r0", prompt, max_new=6, stop_tokens=(ref[2],)))
+        eng.submit(Request("r1", prompt, max_new=6))
+        fin = {r.request_id: r.output for r in eng.run()}
+        assert fin["r0"] == ref[:3], "did not stop AT the stop token"
+        assert fin["r1"] == ref, "slot not recycled after EOS retirement"
+
     def test_controller_switches_under_load(self, tiny):
         cfg, sparams = tiny
         ctrl = DualPrecisionController(
@@ -132,6 +147,41 @@ class TestController:
         for _ in range(20):
             ctrl.decide(StepObservation(1, 0, measured_step_ms=50.0))
         assert ctrl.mode == "fp8"
+
+    def test_p90_samples_tagged_per_mode(self):
+        """Regression: measured samples must land in the deque of the
+        mode that RAN the measured step. A shared deque let fast FP8
+        dwell samples drag the 'FP16' p90 back under budget, bouncing
+        the controller to FP16 one slow step after every switch."""
+        ctrl = DualPrecisionController(
+            SLOConfig(tpot_ms=33.3, hysteresis_steps=2),
+            fp16_ms_per_token=1e-4, fp8_ms_per_token=5e-5)
+        for _ in range(8):                       # slow FP16 steps
+            ctrl.decide(StepObservation(1, 0, 50.0))
+        assert ctrl.mode == "fp8", "measured p90 never engaged FP8"
+        ctrl.decide(StepObservation(1, 0, 5.0))  # fast step, ran in FP8
+        assert list(ctrl._recent["fp8"]) == [5.0], \
+            "FP8-mode sample not tagged to the FP8 deque"
+        assert 5.0 not in ctrl._recent["fp16"], \
+            "FP8 dwell sample polluted the FP16 evidence"
+
+    def test_p90_stale_evidence_decays_and_recovers(self):
+        """Measured-only overload traps the controller in FP8 (FP8 steps
+        add no FP16 samples, so the breaching p90 can never refresh);
+        the decay must drain the stale window — one pre-overload sample
+        per FP8 re-probe cycle — until a now-fast workload HOLDS FP16."""
+        ctrl = DualPrecisionController(
+            SLOConfig(tpot_ms=33.3, hysteresis_steps=2),
+            fp16_ms_per_token=1e-4, fp8_ms_per_token=5e-5)
+        for _ in range(8):
+            ctrl.decide(StepObservation(1, 0, 50.0))
+        assert ctrl.mode == "fp8"
+        modes = [ctrl.decide(StepObservation(1, 0, 5.0)) for _ in range(40)]
+        assert "fp16" in modes, "stale p90 evidence pinned FP8 forever"
+        assert all(m == "fp16" for m in modes[-10:]), \
+            "stale window never drained — controller still flapping"
+        assert 50.0 not in list(ctrl._recent["fp16"])[1:], \
+            "fresh FP16 samples interleaved with undrained stale ones"
 
     def test_free_block_headroom_triggers_fp8(self):
         """MorphServe-style memory-pressure signal: scarce KV headroom

@@ -1,0 +1,349 @@
+"""Speculative decoding on the paged engine: n-gram draft proposal,
+adaptive draft length, BlockManager truncate rollback, and the engine
+bit-exactness contract — greedy outputs identical with speculation on or
+off across precision modes, prefix caching, preemption, and gemma3
+window reclaim (drafts only decide how many tokens one dispatch
+confirms, never which tokens)."""
+
+import numpy as np
+import jax
+import pytest
+
+from repro.configs import ARCHS
+from repro.core.policy import (AdaptiveKController, SpeculationConfig,
+                               StepObservation)
+from repro.models import model as M
+from repro.models.convert import to_serving
+from repro.serving.engine import Engine, Request
+from repro.serving.kvcache import TRASH_BLOCK, BlockManager
+from repro.serving.speculate import NgramProposer
+
+
+@pytest.fixture(scope="module")
+def tiny():
+    cfg = ARCHS["qwen1.5-0.5b"].reduced()
+    params = M.init_params(jax.random.PRNGKey(0), cfg)
+    return cfg, to_serving(params)
+
+
+@pytest.fixture(scope="module")
+def tiny_swa():
+    cfg = ARCHS["gemma3-1b"].reduced()
+    params = M.init_params(jax.random.PRNGKey(0), cfg)
+    return cfg, to_serving(params)
+
+
+# =============================================================================
+# draft proposer
+# =============================================================================
+
+class TestNgramProposer:
+    def test_matches_most_recent_occurrence(self):
+        p = NgramProposer(SpeculationConfig(ngram_max=2, ngram_min=1))
+        # suffix [1, 2] occurs twice; the later one is followed by 7
+        hist = [1, 2, 5, 9, 1, 2, 7, 8, 1, 2]
+        assert p.propose(hist, 2) == [7, 8]
+
+    def test_longest_ngram_wins(self):
+        p = NgramProposer(SpeculationConfig(ngram_max=3, ngram_min=1))
+        # 1-gram suffix [4] recurs at index 1 (followed by 9), but the
+        # 3-gram [2, 3, 4] recurs earlier followed by 5 — longest wins
+        hist = [2, 3, 4, 5, 4, 9, 2, 3, 4]
+        assert p.propose(hist, 1) == [5]
+
+    def test_no_match_returns_empty(self):
+        p = NgramProposer()
+        assert p.propose([1, 2, 3, 4, 5], 4) == []
+        assert p.propose([7], 4) == []       # too short to match itself
+        assert p.propose([], 4) == []
+
+    def test_k_clamps_the_draft(self):
+        p = NgramProposer(SpeculationConfig(ngram_max=1, ngram_min=1))
+        hist = [5, 1, 2, 3, 4, 5]
+        assert p.propose(hist, 3) == [1, 2, 3]
+        assert p.propose(hist, 99) == [1, 2, 3, 4, 5]
+        assert p.propose(hist, 0) == []
+
+    def test_pure_repetition_drafts_the_loop(self):
+        p = NgramProposer(SpeculationConfig(ngram_min=1))
+        assert p.propose([6, 6, 6, 6], 3) == [6, 6, 6]
+
+
+# =============================================================================
+# adaptive draft length
+# =============================================================================
+
+def _obs(drafted, accepted):
+    return StepObservation(batch_tokens=1, queue_depth=0,
+                           measured_step_ms=None, spec_drafted=drafted,
+                           spec_accepted=accepted)
+
+
+class TestAdaptiveK:
+    def test_grows_on_high_acceptance_to_ceiling(self):
+        c = AdaptiveKController(SpeculationConfig(k_init=2, k_max=4))
+        for _ in range(20):
+            k = c.decide(_obs(4, 4))
+        assert k == 4 and max(c.history) == 4
+
+    def test_shrinks_on_rejection_but_floors_at_k_min(self):
+        c = AdaptiveKController(SpeculationConfig(k_init=4, k_min=1))
+        for _ in range(20):
+            k = c.decide(_obs(4, 0))
+        # the floor keeps the acceptance signal alive: K=0 would draft
+        # nothing and the controller could never observe a regime change
+        assert k == 1
+
+    def test_no_adaptation_below_min_drafted(self):
+        c = AdaptiveKController(
+            SpeculationConfig(k_init=3, adapt_min_drafted=50))
+        for _ in range(5):
+            assert c.decide(_obs(4, 0)) == 3
+
+    def test_draftless_steps_leave_the_window_alone(self):
+        c = AdaptiveKController(SpeculationConfig(k_init=2))
+        for _ in range(10):
+            c.decide(_obs(4, 4))
+        k = c.k
+        for _ in range(10):
+            c.decide(_obs(0, 0))             # no drafts: no evidence
+        assert c.k == k
+        assert c.acceptance_rate() == 1.0
+
+
+# =============================================================================
+# truncate rollback (BlockManager unit)
+# =============================================================================
+
+class TestTruncate:
+    def test_drops_exclusive_blocks_back_to_free_list(self):
+        bm = BlockManager(2, 4, 8, 8, prefix_cache=False)
+        a = bm.try_allocate("a", 4, 12)
+        assert bm.ensure(a, 14)              # 4 blocks
+        bm.set_length(a, 9)
+        free0 = bm.n_free_blocks()
+        assert bm.truncate(a, 6) == 2        # blocks 2,3 dropped
+        assert bm.n_free_blocks() == free0 + 2
+        assert bm.seqs[a].length == 6
+        tab = bm.table(a)
+        assert (tab[2:] == TRASH_BLOCK).all() and (tab[:2] != TRASH_BLOCK).all()
+        bm.check_invariants()
+
+    def test_truncate_above_coverage_is_a_noop(self):
+        bm = BlockManager(2, 4, 8, 8)
+        a = bm.try_allocate("a", 4, 4)
+        assert bm.ensure(a, 5)
+        bm.set_length(a, 5)
+        assert bm.truncate(a, 100) == 0
+        assert bm.seqs[a].length == 5
+        bm.check_invariants()
+
+    def test_shared_block_survives_for_other_holder(self):
+        toks = list(range(12))
+        bm = BlockManager(2, 4, 8, 8, prefix_cache=True)
+        a = bm.try_allocate("a", 12, 0, bm.prefix_admit_discount(toks))
+        assert bm.ensure(a, 12)
+        bm.commit(a, 12, toks)               # 3 registered full blocks
+        b = bm.try_allocate("b", 12, 0, bm.prefix_admit_discount(toks))
+        assert bm.attach_prefix(b, toks) == 12
+        shared = list(bm.seqs[b].groups[0].blocks)
+        assert bm.truncate(b, 4) == 2        # b lets go of 2 shared blocks
+        # a still owns them, bytes untouched, still prefix-matchable
+        assert bm.seqs[a].groups[0].blocks == shared
+        assert bm.lookup_prefix(toks) == 12
+        bm.check_invariants()
+
+    def test_registered_exclusive_block_parks_in_lru(self):
+        toks = list(range(8))
+        bm = BlockManager(2, 4, 8, 8, prefix_cache=True)
+        a = bm.try_allocate("a", 8, 0, bm.prefix_admit_discount(toks))
+        assert bm.ensure(a, 8)
+        bm.commit(a, 8, toks)
+        cached0 = bm.n_cached_blocks()
+        bm.truncate(a, 4)                    # drop a committed full block
+        assert bm.n_cached_blocks() == cached0 + 1
+        # its content is intact, so a later admission still attaches it
+        assert bm.lookup_prefix(toks) == 8
+        bm.check_invariants()
+
+    def test_partial_cut_evicts_tail_from_index(self):
+        toks = list(range(8))
+        bm = BlockManager(2, 4, 8, 8, prefix_cache=True)
+        a = bm.try_allocate("a", 8, 0, bm.prefix_admit_discount(toks))
+        assert bm.ensure(a, 8)
+        bm.commit(a, 8, toks)
+        assert bm.lookup_prefix(toks) == 8
+        ev0 = bm.prefix_stats["evictions"]
+        bm.truncate(a, 6)                    # second block now half-valid
+        # future writes at positions 6,7 would diverge from the
+        # registered content — the entry must be gone before that
+        assert bm.prefix_stats["evictions"] == ev0 + 1
+        assert bm.lookup_prefix(toks) == 4
+        bm.check_invariants()
+
+    def test_slid_holes_stay_holes(self):
+        # windowed local group (gemma3 descriptor): slide, then truncate
+        # — the leading holes must never be resurrected or released twice
+        bm = BlockManager(2, 4, 12, 8, prefix_cache=False,
+                          group_windows=(None, 5))
+        a = bm.try_allocate("a", 4, 24)
+        assert bm.ensure(a, 26)
+        bm.set_length(a, 25)
+        bm.slide_window(a)
+        g = bm.seqs[a].groups[1]
+        assert g.slid > 0
+        holes = list(g.blocks[:g.slid])
+        assert all(b == TRASH_BLOCK for b in holes)
+        bm.truncate(a, 9)
+        assert g.blocks[:min(g.slid, len(g.blocks))] == \
+            holes[:min(g.slid, len(g.blocks))]
+        bm.check_invariants()
+
+    def test_device_mirror_tracks_truncate(self):
+        bm = BlockManager(2, 4, 8, 8)
+        a = bm.try_allocate("a", 4, 12)
+        assert bm.ensure(a, 14)
+        bm.set_length(a, 13)
+        np.testing.assert_array_equal(np.asarray(bm.device_tables()),
+                                      bm.group_tables())
+        bm.truncate(a, 3)
+        # the dirty-scatter overlay must carry the trashed entries too
+        np.testing.assert_array_equal(np.asarray(bm.device_tables()),
+                                      bm.group_tables())
+        bm.check_invariants()
+
+
+# =============================================================================
+# engine end-to-end
+# =============================================================================
+
+REP = [5, 6, 7, 8] * 6                       # repetitive: drafts accept
+MIX = [list(range(3, 11)), list(range(40, 48)), REP]
+SPEC = SpeculationConfig(ngram_min=1)
+
+
+def _outputs(cfg, sparams, prompts, *, speculate=None, max_new=8, **kw):
+    eng = Engine(cfg, sparams, n_slots=4, capacity=96, **kw,
+                 speculate=speculate)
+    for i, p in enumerate(prompts):
+        eng.submit(Request(f"r{i}", list(p), max_new=max_new))
+    fin = {r.request_id: r.output for r in eng.run()}
+    return [fin[f"r{i}"] for i in range(len(prompts))], eng
+
+
+@pytest.mark.slow
+class TestSpeculativeEngine:
+    @pytest.mark.parametrize("mode", ["fp16", "fp8"])
+    def test_bit_exact_on_off(self, tiny, mode):
+        cfg, sparams = tiny
+        off, _ = _outputs(cfg, sparams, MIX, forced_mode=mode)
+        on, eng = _outputs(cfg, sparams, MIX, forced_mode=mode,
+                           speculate=SPEC)
+        assert on == off
+        assert eng.spec_stats()["accepted"] > 0, \
+            "repetitive prompt never accepted a draft — vacuous parity"
+        eng.blocks.check_invariants()
+
+    def test_bit_exact_with_prefix_cache_sharing(self, tiny):
+        """Seed the cache with one full run, then serve two requests whose
+        prompts share its prefix — speculation must not disturb the
+        shared blocks (accepted runs COW before writing)."""
+        cfg, sparams = tiny
+
+        def serve(spec):
+            eng = Engine(cfg, sparams, n_slots=4, capacity=96,
+                         forced_mode="fp16", prefix_cache=True,
+                         block_size=4, speculate=spec)
+            eng.submit(Request("seed", list(REP), max_new=8))
+            eng.run()
+            for i, p in enumerate([REP, list(REP) + [9, 9]]):
+                eng.submit(Request(f"r{i}", list(p), max_new=8))
+            fin = {r.request_id: r.output for r in eng.run()}
+            return [fin["seed"], fin["r0"], fin["r1"]], eng
+
+        off, e0 = serve(None)
+        on, e1 = serve(SPEC)
+        assert on == off
+        assert e1.prefix_cache_stats()["hit_rate"] > 0, \
+            e1.prefix_cache_stats()
+        e1.blocks.check_invariants()
+
+    def test_bit_exact_under_preemption(self, tiny):
+        cfg, sparams = tiny
+        kw = dict(forced_mode="fp16", block_size=4, n_blocks=14,
+                  max_new=10)
+        off, e0 = _outputs(cfg, sparams, MIX, **kw)
+        on, e1 = _outputs(cfg, sparams, MIX, speculate=SPEC, **kw)
+        assert on == off
+        assert e1.stats["preemptions"] > 0 or e0.stats["preemptions"] > 0, \
+            "pool never tight enough to preempt — vacuous"
+        e1.blocks.check_invariants()
+
+    def test_bit_exact_gemma3_window_reclaim(self, tiny_swa):
+        cfg, sparams = tiny_swa
+        prompts = [[3, 4, 5] * 9, [11, 12] * 12]     # > window 19
+        kw = dict(forced_mode="fp16", block_size=4, max_new=10)
+        off, e0 = _outputs(cfg, sparams, prompts, **kw)
+        on, e1 = _outputs(cfg, sparams, prompts, speculate=SPEC, **kw)
+        assert on == off
+        assert e1.stats["window_reclaimed_blocks"] > 0, \
+            "local-layer window never slid — vacuous"
+        e1.blocks.check_invariants()
+
+    def test_acceptance_reduces_dispatches(self, tiny):
+        cfg, sparams = tiny
+        off, e0 = _outputs(cfg, sparams, [REP], forced_mode="fp16",
+                           max_new=12)
+        on, e1 = _outputs(cfg, sparams, [REP], forced_mode="fp16",
+                          max_new=12, speculate=SPEC)
+        assert on == off
+        ss = e1.spec_stats()
+        assert ss["spec_dispatches"] > 0
+        assert ss["tokens_accepted_per_dispatch"] > 1.0
+        assert e1.stats["decode_dispatches"] < e0.stats["decode_dispatches"]
+        # draft verification rides INSIDE the decode dispatch: no extra
+        # prefill or aux work appears
+        assert e1.stats["prefill_dispatches"] == e0.stats["prefill_dispatches"]
+
+    def test_eos_stops_accepted_run_mid_run(self, tiny):
+        cfg, sparams = tiny
+        full, _ = _outputs(cfg, sparams, [REP], forced_mode="fp16",
+                           max_new=12)
+        stop = full[0][3]                    # mid-stream token as EOS
+        want = full[0][:full[0].index(stop) + 1]
+        for spec in (None, SPEC):
+            eng = Engine(cfg, sparams, n_slots=4, capacity=96,
+                         forced_mode="fp16", speculate=spec)
+            eng.submit(Request("r", list(REP), max_new=12,
+                               stop_tokens=(stop,)))
+            out = eng.run()[0].output
+            assert out == want, (spec, out, want)
+            eng.blocks.check_invariants()
+
+    def test_eos_on_first_generated_token(self, tiny):
+        cfg, sparams = tiny
+        full, _ = _outputs(cfg, sparams, [REP], forced_mode="fp16",
+                           max_new=12)
+        for spec in (None, SPEC):
+            eng = Engine(cfg, sparams, n_slots=4, capacity=96,
+                         forced_mode="fp16", speculate=spec)
+            eng.submit(Request("r", list(REP), max_new=12,
+                               stop_tokens=(full[0][0],)))
+            fin = eng.run()
+            # previously a first-token EOS decoded on to max_new: the
+            # pending patch never fed the stop-token check
+            assert fin[0].output == [full[0][0]], (spec, fin[0].output)
+            eng.blocks.check_invariants()
+
+    def test_recurrent_family_rejects_speculation(self):
+        cfg = ARCHS["zamba2-2.7b"].reduced()
+        params = to_serving(M.init_params(jax.random.PRNGKey(0), cfg))
+        with pytest.raises(ValueError, match="roll"):
+            Engine(cfg, params, n_slots=2, capacity=64, speculate=True)
+
+    def test_spec_stats_guard_zero_traffic(self, tiny):
+        cfg, sparams = tiny
+        eng = Engine(cfg, sparams, n_slots=2, capacity=64, speculate=True)
+        ss = eng.spec_stats()                # no requests ever served
+        assert ss["acceptance_rate"] == 0.0
+        assert ss["tokens_accepted_per_dispatch"] == 0.0
