@@ -102,7 +102,13 @@ DEFAULT_HOT_ROOTS = ["repro.serving.engine.Engine.step",
                      # adaptive-K policy run every step and must stay
                      # pure bookkeeping (a sync there serializes decode)
                      "repro.serving.speculate.NgramProposer.propose",
-                     "repro.core.policy.AdaptiveKController.decide"]
+                     "repro.core.policy.AdaptiveKController.decide",
+                     # tiered-KV scheduling runs inside every step: spill
+                     # capture is the ONE sanctioned aux d2h (inline
+                     # nfp-ignore on its device_get), and the restore
+                     # drain must stay scatter-dispatch + bookkeeping
+                     "repro.serving.engine.Engine._flush_spills",
+                     "repro.serving.engine.Engine._drain_restores"]
 
 
 def _host_safe_arg(arg: ast.AST, mod: Module) -> bool:

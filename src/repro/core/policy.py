@@ -150,6 +150,55 @@ class DualPrecisionController:
 # =============================================================================
 
 @dataclasses.dataclass
+class RestorePolicy:
+    """SLO guard for the tiered-KV restore path (serving/engine.py).
+
+    Restoring a host-tier prefix block is an h2d scatter that shares the
+    step with live decodes, so an unbounded restore queue would blow
+    TPOT for every active sequence. Two knobs bound it:
+
+    * `max_restore_bytes_per_step` caps the bytes each step's
+      `_drain_restores` uploads (the engine always grants at least one
+      block so gated rows make progress — the cap shapes latency, it
+      cannot deadlock a sequence).
+    * `max_queue_bytes` is the admission gate: once the queued restore
+      backlog reaches it, new prefix matches fall back to plain
+      recompute (`admit() -> False`, counted in
+      `stats["restore_fallbacks"]`) instead of piling on. Zero disables
+      host-tier matching outright (spills still happen — the tier keeps
+      filling for persistence — but nothing is ever restored).
+
+    `from_slo` derives the per-step cap from a TPOT budget: spend at
+    most `frac` of each step's latency budget on restore h2d traffic at
+    the given link bandwidth."""
+    max_restore_bytes_per_step: int = 32 << 20
+    max_queue_bytes: int = 256 << 20
+
+    def admit(self, queued_bytes: int) -> bool:
+        """May a new admission match host-tier blocks (enqueueing more
+        restores), given the current restore backlog?"""
+        return queued_bytes < self.max_queue_bytes
+
+    def grant(self, queued_bytes: int) -> int:
+        """Restore-byte budget for this step."""
+        return self.max_restore_bytes_per_step
+
+    @classmethod
+    def from_slo(cls, slo: SLOConfig, *, h2d_gbps: float = 16.0,
+                 frac: float = 0.25, queue_steps: int = 8) -> RestorePolicy:
+        """Tie the caps to the TPOT SLO: `frac` of each step's latency
+        budget goes to restore uploads at `h2d_gbps` link bandwidth, and
+        the admission gate tolerates a backlog worth `queue_steps`
+        steps of that budget."""
+        per_step = int(slo.tpot_ms * slo.headroom * frac / 1e3
+                       * h2d_gbps * 1e9)
+        return cls(max_restore_bytes_per_step=max(per_step, 1),
+                   max_queue_bytes=max(per_step * queue_steps, 1))
+
+
+# =============================================================================
+
+@dataclasses.dataclass
 class SpeculationConfig:
     """Knobs for n-gram speculative decoding (serving/speculate.py) and
     the adaptive draft-length policy below.

@@ -124,6 +124,7 @@ import collections
 import contextlib
 import dataclasses
 import functools
+import json
 import os
 import time
 from typing import Any, Callable
@@ -135,11 +136,13 @@ import numpy as np
 from repro.configs.base import ArchConfig
 from repro.core.compat import mesh_context
 from repro.core.policy import (AdaptiveKController, DualPrecisionController,
-                               SpeculationConfig, StepObservation)
+                               RestorePolicy, SpeculationConfig,
+                               StepObservation)
 from repro.models import model as M
 from repro.models.layers import Runtime
 from repro.serving import shard as SHARD
-from repro.serving.kvcache import BlockManager, SlotManager
+from repro.serving.kvcache import (TRASH_BLOCK, BlockManager, HostPool,
+                                   SlotManager)
 from repro.serving.speculate import NgramProposer
 
 
@@ -194,7 +197,11 @@ class Engine:
                  n_blocks: int | None = None, chunk_tokens: int = 256,
                  prefix_cache: bool = True, window_reclaim: bool = True,
                  debug_invariants: bool = False, mesh=None,
-                 speculate: SpeculationConfig | bool | None = None):
+                 speculate: SpeculationConfig | bool | None = None,
+                 host_offload: bool = True,
+                 host_bytes: int | None = None,
+                 restore_policy: RestorePolicy | None = None,
+                 persist_dir: str | None = None):
         # mesh (launch.mesh.make_serving_mesh): drive an N-chip
         # tensor-parallel mesh as ONE logical device — weights and the
         # paged pool are committed to sharded layouts here (serving/
@@ -267,7 +274,17 @@ class Engine:
                       # without speculation, >1 iff drafts accepted)
                       "spec_dispatches": 0, "spec_drafted": 0,
                       "spec_accepted": 0, "decode_rows": 0,
-                      "decode_tokens": 0}
+                      "decode_tokens": 0,
+                      # tiered KV (tiered_stats()): blocks/bytes spilled
+                      # to the host tier, restored through the scatter
+                      # path, lazily lo-plane-completed, admissions that
+                      # fell back to recompute under the SLO guard, and
+                      # the run() iteration-cap satellite counter — all
+                      # host-side bookkeeping, so mesh-size-invariant
+                      "spilled_blocks": 0, "spilled_bytes": 0,
+                      "restored_blocks": 0, "restored_bytes": 0,
+                      "lo_lazy_blocks": 0, "lo_lazy_bytes": 0,
+                      "restore_fallbacks": 0, "iters_exhausted": 0}
         self._last_step_ms: float | None = None
         # attn_backend="pallas" serves planar GQA decode through the
         # block-table scalar-prefetch kernel (layers.attention "paged");
@@ -296,11 +313,24 @@ class Engine:
             gw = (None,) * len(gw)
         if n_blocks is None:
             n_blocks = n_slots * mbs         # dense-equivalent pool by default
+        # tiered KV (kvcache.py HostPool): spill LRU-evicted prefix
+        # blocks to a host pool instead of discarding them, restore
+        # matched blocks through the scatter-upload path under the
+        # RestorePolicy SLO guard, and (persist_dir) serialize index +
+        # host pool across engine restarts. Only prefix-cacheable paged
+        # families participate — recurrent state cannot be re-attached.
+        self._host_tier = bool(host_offload and prefix_cache
+                               and self.desc.paged
+                               and not self.desc.slot_planes)
+        self._restore_policy = restore_policy or RestorePolicy()
+        self.persist_dir = persist_dir
         self.blocks = BlockManager(n_slots, block_size, n_blocks, mbs,
                                    prefix_cache=prefix_cache,
                                    group_windows=gw,
                                    mirror_sharding=None if mesh is None
-                                   else SHARD.replicated(mesh))
+                                   else SHARD.replicated(mesh),
+                                   host_pool=HostPool(host_bytes)
+                                   if self._host_tier else None)
         # slot-resident state side (hybrid/ssm descriptors): SlotManager
         # tracks per-slot occupancy in lockstep with the block tables
         self.slot_state = SlotManager(n_slots, capacity) \
@@ -340,6 +370,69 @@ class Engine:
                                 for gi, g in enumerate(self.desc.groups)}
         else:
             self._copy_block = {0: _make_copy(None)}
+        # tiered-KV executables: per window group, ONE jitted pool
+        # gather (spill capture: d2h of K evicted blocks' plane bytes)
+        # and ONE jitted pool scatter per plane set (restore upload —
+        # the same dirty-scatter discipline the block tables use). Block
+        # counts are padded to a power of two (gather pads repeat the
+        # last id; scatter pads aim at the trash block — both
+        # idempotent), so a handful of executables serve every drain.
+        # Planar (NestedKV) pools split the plane set: fp8 hi planes
+        # upload eagerly at restore, lo planes lazily on the first
+        # FP16-mode touch — half the restore h2d while serving fp8.
+        if self._host_tier:
+            pool_key = "shared" if self.desc.kind == "hybrid" else "attn"
+            names = tuple(p.name for p in self.desc.planes)
+            self._lo_planes = tuple(n for n in names if n.endswith("_lo")) \
+                if self.kv_planar else ()
+            self._hi_planes = tuple(n for n in names
+                                    if n not in self._lo_planes)
+
+            def _make_tier(layers):
+                if layers is None:
+                    sel = lambda a, ids: a[:, ids]
+                    put = lambda a, ids, v: a.at[:, ids].set(v)
+                else:
+                    li = jnp.asarray(layers, jnp.int32)
+                    sel = lambda a, ids: a[li[:, None], ids[None, :]]
+                    put = lambda a, ids, v: \
+                        a.at[li[:, None], ids[None, :]].set(v)
+                gather = jax.jit(lambda c, ids: {
+                    p: sel(a, ids) for p, a in c[pool_key].items()})
+
+                def make_scatter(plane_names):
+                    pn = tuple(plane_names)
+
+                    def f(c, ids, vals):
+                        sub = dict(c[pool_key])
+                        for p in pn:
+                            sub[p] = put(sub[p], ids, vals[p])
+                        out = dict(c)
+                        out[pool_key] = sub
+                        return out
+                    return jax.jit(f, donate_argnums=(0,))
+                return gather, make_scatter
+            glayers = [g.layers for g in self.desc.groups] \
+                if self.desc.groups else [None]
+            self._spill_gather, self._scatter_hi, self._scatter_lo = {}, {}, {}
+            self._eager_block_bytes, self._lo_block_bytes = {}, {}
+            by_name = {p.name: p for p in self.desc.planes}
+            for gi, lys in enumerate(glayers):
+                gather, make_scatter = _make_tier(lys)
+                self._spill_gather[gi] = gather
+                self._scatter_hi[gi] = make_scatter(self._hi_planes)
+                if self._lo_planes:
+                    self._scatter_lo[gi] = make_scatter(self._lo_planes)
+                nl = len(lys) if lys is not None else self.desc.planes[0].n_layers
+
+                def pbytes(pl):
+                    return sum(int(nl * block_size
+                                   * np.prod(by_name[p].token_shape,
+                                             dtype=np.int64)
+                                   * np.dtype(by_name[p].dtype).itemsize)
+                               for p in pl)
+                self._eager_block_bytes[gi] = pbytes(self._hi_planes)
+                self._lo_block_bytes[gi] = pbytes(self._lo_planes)
         if self.slot_state is not None:
             # zero one slot's recurrent state at (re-)admission
             self._zero_slot = jax.jit(
@@ -363,6 +456,8 @@ class Engine:
         # same step's decode inputs (no host sync on the seam)
         self._overlay = jax.jit(lambda t, s, ids, r: t.at[s, 0].set(ids[r]))
         self.iteration = 0
+        if self._host_tier and persist_dir:
+            self._load_prefix_store(persist_dir)
 
     # -- public API -----------------------------------------------------------
     def submit(self, req: Request) -> None:
@@ -370,10 +465,26 @@ class Engine:
             raise ValueError(f"request {req.request_id}: empty prompt")
         self.queue.append(req)
 
-    def run(self, max_iters: int = 10_000) -> list[Request]:
+    def run(self, max_iters: int = 10_000,
+            allow_partial: bool = False) -> list[Request]:
+        """Step until every submitted request finishes. Hitting
+        `max_iters` with work still queued/active is an ERROR unless
+        `allow_partial=True` — a silently-truncated run used to let
+        benches report a partially-served trace as complete. Either way
+        `stats["iters_exhausted"]` records how many requests were left
+        unserved when the cap hit."""
         while (self.queue or self.active or self.prefilling) \
                 and self.iteration < max_iters:
             self.step()
+        leftover = len(self.queue) + len(self.active) + len(self.prefilling)
+        if leftover:
+            self.stats["iters_exhausted"] = leftover
+            if not allow_partial:
+                raise RuntimeError(
+                    f"run(max_iters={max_iters}) exhausted its iteration "
+                    f"cap with {leftover} requests unfinished; pass "
+                    f"allow_partial=True to accept a partially-served "
+                    f"trace")
         return self.finished
 
     def block_utilization(self) -> float:
@@ -409,6 +520,235 @@ class Engine:
                 s["decode_tokens"] / s["decode_rows"]
                 if s["decode_rows"] else 0.0,
                 "k": self._spec_k.k if self._spec_k else 0}
+
+    # -- tiered KV: spill / restore / persist ---------------------------------
+    def tiered_stats(self) -> dict:
+        """Host-tier effectiveness: blocks spilled (d2h captures),
+        restored (scatter uploads), lazily lo-completed, admissions the
+        SLO guard bounced to recompute, and current tier occupancy."""
+        s, bm = self.stats, self.blocks
+        host = bm.host
+        return {"enabled": self._host_tier,
+                "host_blocks": len(host) if host is not None else 0,
+                "host_bytes": host.bytes if host is not None else 0,
+                "spilled_blocks": s["spilled_blocks"],
+                "spilled_bytes": s["spilled_bytes"],
+                "restored_blocks": s["restored_blocks"],
+                "restored_bytes": s["restored_bytes"],
+                "lo_lazy_blocks": s["lo_lazy_blocks"],
+                "lo_lazy_bytes": s["lo_lazy_bytes"],
+                "restore_fallbacks": s["restore_fallbacks"],
+                "host_hit_blocks": bm.prefix_stats["host_hit_blocks"],
+                "queued_restores": len(bm.restore_jobs)}
+
+    def _tier_dev(self, a: np.ndarray):
+        """Device placement for tiny host-built spill/restore operands
+        (block ids, stacked plane values): replicated under a mesh so
+        GSPMD never tries to partition control data."""
+        if self.mesh is None:
+            return jnp.asarray(a)
+        return SHARD.put_replicated(self.mesh, a)
+
+    def _capture_blocks(self, jobs: list[tuple[int, int, int]]) -> None:
+        """Copy (group, block, hash) pool bytes into the host tier: one
+        jitted per-group gather (ids padded to a power of two by
+        repeating the last id — idempotent), then a single batched d2h
+        pull per group. Used by `_flush_spills` (eviction/preemption
+        spills) and `save_prefix_store` (non-evicting index mirror)."""
+        bm = self.blocks
+        by_g: dict[int, list[tuple[int, int]]] = {}
+        for g, b, h in jobs:
+            by_g.setdefault(g, []).append((b, h))
+        for g, items in sorted(by_g.items()):
+            kb = _bucket(len(items), 1)
+            ids = np.full(kb, items[-1][0], np.int32)
+            for i, (b, _h) in enumerate(items):
+                ids[i] = b
+            out = self._spill_gather[g](self.caches, self._tier_dev(ids))
+            # nfp: ignore[NFP001] tiered-KV spill capture: batched d2h of evicted cold blocks, an aux transfer that never sits on the step's argmax sync
+            planes = jax.device_get(out)
+            for i, (_b, h) in enumerate(items):
+                entry = {p: np.ascontiguousarray(a[:, i])
+                         for p, a in planes.items()}
+                bm.store_spill(g, h, entry)
+                self.stats["spilled_blocks"] += 1
+                self.stats["spilled_bytes"] += sum(
+                    a.nbytes for a in entry.values())
+            self.stats["aux_dispatches"] += 1
+
+    def _flush_spills(self) -> None:
+        """Capture every queued evicted-block spill to the host tier.
+        MUST run before any cache-writing dispatch: the evicted block
+        ids are already reallocated, so their bytes are intact only
+        until the next write lands. No-op when nothing is queued."""
+        if not self._host_tier:
+            return
+        jobs = self.blocks.take_spills()
+        if jobs:
+            self._capture_blocks(jobs)
+
+    def _tier_upload(self, g: int, items: list[tuple[int, int]],
+                     names: tuple[str, ...]) -> int:
+        """Scatter host-tier bytes for `names` planes of [(block, hash)]
+        `items` into group g's pool rows (one jitted donated scatter —
+        the same upload path the device table mirror uses). Pad slots
+        aim at the trash block. Returns bytes shipped."""
+        bm = self.blocks
+        kb = _bucket(len(items), 1)
+        ids = np.full(kb, TRASH_BLOCK, np.int32)
+        vals: dict[str, np.ndarray] = {}
+        nbytes = 0
+        for i, (b, h) in enumerate(items):
+            ids[i] = b
+            entry = bm.host.get((g, h))
+            for p in names:
+                a = entry[p]
+                if p not in vals:
+                    vals[p] = np.zeros((a.shape[0], kb) + a.shape[1:],
+                                       a.dtype)
+                vals[p][:, i] = a
+                nbytes += a.nbytes
+        self.caches = (self._scatter_hi if names == self._hi_planes
+                       else self._scatter_lo)[g](
+            self.caches, self._tier_dev(ids),
+            {p: self._tier_dev(v) for p, v in vals.items()})
+        self.stats["aux_dispatches"] += 1
+        return nbytes
+
+    def _restore_queued_bytes(self) -> int:
+        """Eager (hi-plane) bytes waiting in the restore queue — the
+        backlog the RestorePolicy's admission gate reads."""
+        return sum(self._eager_block_bytes[g]
+                   for g, _b, _h, _t in self.blocks.restore_jobs)
+
+    def _host_admit(self) -> bool:
+        """May this admission match host-tier blocks? The SLO guard
+        bounces the match to plain recompute when the restore backlog
+        would blow TPOT (`stats["restore_fallbacks"]`)."""
+        if not self._host_tier:
+            return False
+        bm = self.blocks
+        if not (len(bm.host) or bm._spill_pending):
+            return True                      # nothing to restore anyway
+        if self._restore_policy.admit(self._restore_queued_bytes()):
+            return True
+        self.stats["restore_fallbacks"] += 1
+        return False
+
+    def _drain_restores(self) -> None:
+        """Upload queued host-tier restores at the top of the step,
+        bounded by the RestorePolicy's per-step byte grant (always at
+        least one block, so gated rows make progress — the guard shapes
+        latency, it cannot deadlock). Spill captures run first: a
+        restore may target an entry whose bytes are still queued for
+        capture."""
+        bm = self.blocks
+        if not self._host_tier or not bm.restore_jobs:
+            return
+        self._flush_spills()
+        budget = self._restore_policy.grant(self._restore_queued_bytes())
+        taken: dict[int, list[tuple[int, int]]] = {}
+        spent = 0
+        while bm.restore_jobs:
+            g, b, h, t = bm.restore_jobs[0]
+            if not bm.claim_restore(g, b, h, t):
+                bm.restore_jobs.popleft()    # voided by release/preempt
+                continue
+            cost = self._eager_block_bytes[g]
+            if spent and spent + cost > budget:
+                break
+            bm.restore_jobs.popleft()
+            taken.setdefault(g, []).append((b, h))
+            spent += cost
+        lazy = bool(self._lo_planes)
+        for g, items in sorted(taken.items()):
+            nbytes = self._tier_upload(g, items, self._hi_planes)
+            for b, h in items:
+                bm.finish_restore(g, b, h, lo_pending=lazy)
+            self.stats["restored_blocks"] += len(items)
+            self.stats["restored_bytes"] += nbytes
+
+    def _upload_lo(self, triples: list[tuple[int, int, int]]) -> None:
+        """Complete deferred lo planes for (group, block, hash) triples
+        (host-entry pins transfer here and are released after the
+        upload)."""
+        if not triples:
+            return
+        bm = self.blocks
+        self._flush_spills()
+        by_g: dict[int, list[tuple[int, int]]] = {}
+        for g, b, h in triples:
+            by_g.setdefault(g, []).append((b, h))
+        for g, items in sorted(by_g.items()):
+            nbytes = self._tier_upload(g, items, self._lo_planes)
+            for _b, h in items:
+                bm.host.unpin((g, h))
+            self.stats["lo_lazy_blocks"] += len(items)
+            self.stats["lo_lazy_bytes"] += nbytes
+
+    def _ensure_lo(self, mode: str) -> None:
+        """FP16 joins hi+lo planes everywhere, so the first FP16-mode
+        step after a planar restore must land every deferred lo plane
+        before it dispatches."""
+        if mode == "fp16" and self._host_tier and self._lo_planes:
+            self._upload_lo(self.blocks.take_lo_pending())
+
+    def _store_meta(self) -> dict:
+        """Layout fingerprint of the persisted prefix store: a store is
+        only loadable into an engine whose chain hashes AND pool plane
+        shapes mean the same thing."""
+        return {"version": 1, "arch_id": self.cfg.arch_id,
+                "kind": self.desc.kind, "planar": bool(self.kv_planar),
+                "block_size": self.block_size,
+                "group_windows": [w if w is None else int(w)
+                                  for w in self.blocks.group_windows],
+                "planes": {p.name: [list(p.token_shape), p.dtype]
+                           for p in self.desc.planes}}
+
+    def save_prefix_store(self, path: str | None = None) -> int:
+        """Mirror the ENTIRE prefix index into the host tier (a
+        non-evicting batched capture) and serialize it — chain-hash keys
+        plus block bytes — to `path` (default `persist_dir`). Because
+        chain hashes are stable blake2b content digests, a fresh
+        `Engine(persist_dir=...)` in another process re-admits these
+        prefixes without recomputing them. Returns entries written."""
+        path = path or self.persist_dir
+        if not self._host_tier or not path:
+            raise ValueError("save_prefix_store needs host_offload and a "
+                             "persist_dir/path")
+        with (contextlib.nullcontext() if self.mesh is None
+              else mesh_context(self.mesh)):
+            self._flush_spills()
+            self._capture_blocks(self.blocks.mirror_jobs())
+        os.makedirs(path, exist_ok=True)
+        arrs = {f"{g}|{h}|{p}": a
+                for (g, h), planes in self.blocks.host.entries.items()
+                for p, a in planes.items()}
+        np.savez(os.path.join(path, "prefix_store.npz"), **arrs)
+        with open(os.path.join(path, "prefix_store.json"), "w") as f:
+            json.dump(self._store_meta(), f)
+        return len(self.blocks.host)
+
+    def _load_prefix_store(self, path: str) -> int:
+        """Load a persisted prefix store into the host tier (engine
+        construction). A missing store or a layout-fingerprint mismatch
+        loads nothing — stale bytes must never be joined with a
+        different block size, plane layout, or window split."""
+        meta_p = os.path.join(path, "prefix_store.json")
+        npz_p = os.path.join(path, "prefix_store.npz")
+        if not (os.path.exists(meta_p) and os.path.exists(npz_p)):
+            return 0
+        with open(meta_p) as f:
+            if json.load(f) != self._store_meta():
+                return 0
+        entries: dict[tuple[int, int], dict[str, np.ndarray]] = {}
+        with np.load(npz_p) as data:
+            for key in data.files:
+                g, h, p = key.split("|", 2)
+                entries.setdefault((int(g), int(h)), {})[p] = data[key]
+        for key, planes in entries.items():
+            self.blocks.host.put(key, planes, loaded=True)
+        return len(entries)
 
     # -- mode selection -------------------------------------------------------
     def _mode(self, decode_tokens: int, prefill_tokens: int,
@@ -447,10 +787,16 @@ class Engine:
     def _step_inner(self) -> None:
         self.iteration += 1
         t0 = self.clock()
+        # land queued host-tier restores first (SLO-bounded): rows whose
+        # blocks finish restoring here become schedulable this very step
+        self._drain_restores()
         plan = self._plan_chunks()
         mode = self._mode(len(self.active),
                           sum(take for _, _, take in plan),
                           free_block_frac=self.blocks.free_block_frac())
+        # planar pools restore hi planes eagerly, lo lazily: the first
+        # FP16-mode step joins hi+lo, so deferred lo bytes land NOW
+        self._ensure_lo(mode)
         # pending: (req, output index, device ids, row, slot) patched —
         # and EOS-checked — at the end-of-step sync; fresh: (slot,
         # device ids, row) prefills that completed this step and decode
@@ -495,6 +841,9 @@ class Engine:
         for idx in order:
             if budget <= 0:
                 break
+            if self.blocks.row_unrestored(idx):
+                continue    # host-tier restore in flight: reads would
+                            # see garbage; _drain_restores ungates it
             st = self.prefilling[idx]
             want = min(len(st.seq_tokens) - st.done, budget)
             take = self._ensure_take(idx, st.done, want)
@@ -524,11 +873,15 @@ class Engine:
             # recomputes >= 1 token so the first-token logit is produced
             # (cow_for_write forks the tail block if that write would
             # land in a shared one)
-            matched = self.blocks.attach_prefix(idx, seq_tokens)
+            matched = self.blocks.attach_prefix(
+                idx, seq_tokens, allow_host=self._host_admit())
             start = min(matched, len(seq_tokens) - 1)
             self.blocks.set_length(idx, start)
             st = _Prefill(req, seq_tokens, done=start)
             self.prefilling[idx] = st
+            if self.blocks.row_unrestored(idx):
+                continue    # attached host-tier blocks: the first chunk
+                            # waits for their restore uploads to land
             take = self._ensure_take(
                 idx, start, min(len(seq_tokens) - start, budget))
             if take > 0:
@@ -619,6 +972,14 @@ class Engine:
         """Materialize COW forks: copy each forked block's bytes — the
         owning group's layer rows only — in the physical pool (one
         jitted scatter per group, src/dst traced)."""
+        if self._host_tier and triples:
+            # copies are cache writes: capture queued spills first, and
+            # complete any fork SOURCE's deferred lo planes — the copy
+            # clones all planes, so a lo-pending src would hand the dst
+            # stale lo bytes with no lo_pending record of its own
+            self._flush_spills()
+            self._upload_lo(self.blocks.take_lo_pending_for(
+                [(g, src) for g, src, _dst in triples]))
         for g, src, dst in triples:
             self.caches = self._copy_block[g](
                 self.caches, jnp.int32(src), jnp.int32(dst))
@@ -694,6 +1055,17 @@ class Engine:
             qo[r] = start
             kvl[r] = start + take
             lp[r] = take - 1
+        if self._host_tier:
+            # the fused dispatch writes the pool: queued spill captures
+            # go first, and any lo-pending block the write ranges touch
+            # (the resume-boundary rewrite can land in a restored block
+            # the row owns exclusively) completes its lo planes NOW —
+            # a later whole-block lo scatter would clobber fresh bytes
+            self._flush_spills()
+            touched = [p for idx, start, take in entries
+                       for p in self.blocks.lo_pending_in_range(
+                           idx, start, start + take)]
+            self._upload_lo(self.blocks.take_lo_pending_for(touched))
         ids, self.caches = self._fused_fn(mode, rb, cb)(
             self.params, self.caches, self._h2d(tokens),
             self.blocks.device_tables(), self._h2d(rows), self._h2d(qo),
@@ -907,6 +1279,12 @@ class Engine:
                     toks, self._h2d(np.asarray([s], np.int32)), a,
                     self._h2d(np.asarray([r], np.int32)))
                 self.stats["aux_dispatches"] += 1
+        # decode writes the pool: capture queued spills (ensure() may
+        # have evicted LRU prefix blocks above) before the write lands.
+        # No lo guard here — decode/draft writes only ever land in
+        # partially-filled or COW-exclusive tail blocks, never in a
+        # restored (full, registered) block.
+        self._flush_spills()
         if kmax:
             ids, self.caches = self._spec_fn(mode, cb)(
                 self.params, self.caches, toks, self.blocks.device_tables(),

@@ -118,6 +118,7 @@ from __future__ import annotations
 import collections
 import dataclasses
 import functools
+import hashlib
 
 import jax
 import jax.numpy as jnp
@@ -300,10 +301,105 @@ def _pow2(n: int) -> int:
 
 
 def _chain_hash(parent: int, tokens: tuple[int, ...]) -> int:
-    return hash((parent, tokens))
+    """Stable content digest of one block's prefix chain link.
+
+    Python's builtin `hash()` is salted per process (PYTHONHASHSEED), so
+    chain hashes built from it could never be compared across engine
+    processes or serialized with the host-tier prefix store — two
+    restarts of the same engine would disagree on every key. blake2b
+    over the parent digest + the block's token bytes is deterministic
+    everywhere, and 64 bits keeps the index keys cheap ints."""
+    h = hashlib.blake2b(int(parent).to_bytes(8, "little", signed=True),
+                        digest_size=8)
+    for t in tokens:
+        h.update(int(t).to_bytes(8, "little", signed=True))
+    return int.from_bytes(h.digest(), "little", signed=True)
 
 
-_ROOT_HASH = hash(("prefix-root",))
+_ROOT_HASH = int.from_bytes(
+    hashlib.blake2b(b"prefix-root", digest_size=8).digest(),
+    "little", signed=True)
+
+
+class HostPool:
+    """Second KV tier: pinned host memory holding evicted prefix blocks.
+
+    Entries are keyed by (group, chain hash) — the same stable identity
+    the device-side prefix index uses — and each holds one block's pool
+    bytes per plane, shaped (group_layers, block_size, *token_shape) as
+    numpy arrays. The tier is INCLUSIVE: restoring an entry to the
+    device keeps the host copy, so a restored-then-re-evicted block
+    (registered blocks are immutable under COW) never needs a second
+    d2h capture, and lazily-restored lo planes always have a source.
+
+    `max_bytes` bounds the tier with drop-oldest LRU eviction; entries
+    some device block still depends on (a queued restore, or a pending
+    lazy lo-plane upload) are PINNED and skipped by the eviction scan.
+    """
+
+    def __init__(self, max_bytes: int | None = None):
+        self.entries: collections.OrderedDict[
+            tuple[int, int], dict[str, np.ndarray]] = collections.OrderedDict()
+        self.max_bytes = max_bytes
+        self.bytes = 0
+        self._pins: collections.Counter = collections.Counter()
+        self.stats = {"spilled_blocks": 0, "spilled_bytes": 0,
+                      "restored_blocks": 0, "restored_bytes": 0,
+                      "dropped_blocks": 0, "loaded_blocks": 0}
+
+    def __contains__(self, key: tuple[int, int]) -> bool:
+        return key in self.entries
+
+    def __len__(self) -> int:
+        return len(self.entries)
+
+    @staticmethod
+    def entry_bytes(planes: dict[str, np.ndarray]) -> int:
+        return sum(a.nbytes for a in planes.values())
+
+    def pin(self, key: tuple[int, int]) -> None:
+        assert key in self.entries, key
+        self._pins[key] += 1
+
+    def unpin(self, key: tuple[int, int]) -> None:
+        assert self._pins[key] > 0, key
+        self._pins[key] -= 1
+        if self._pins[key] == 0:
+            del self._pins[key]
+
+    def pinned(self, key: tuple[int, int]) -> bool:
+        return self._pins.get(key, 0) > 0
+
+    def put(self, key: tuple[int, int], planes: dict[str, np.ndarray],
+            loaded: bool = False) -> None:
+        """Insert (or refresh) one block's bytes; `loaded` marks entries
+        deserialized from a persisted store rather than spilled live."""
+        if key in self.entries:
+            self.bytes -= self.entry_bytes(self.entries.pop(key))
+        self.entries[key] = planes
+        nb = self.entry_bytes(planes)
+        self.bytes += nb
+        if loaded:
+            self.stats["loaded_blocks"] += 1
+        else:
+            self.stats["spilled_blocks"] += 1
+            self.stats["spilled_bytes"] += nb
+        self._shrink()
+
+    def get(self, key: tuple[int, int]) -> dict[str, np.ndarray]:
+        self.entries.move_to_end(key)        # LRU touch
+        return self.entries[key]
+
+    def _shrink(self) -> None:
+        if self.max_bytes is None:
+            return
+        while self.bytes > self.max_bytes:
+            victim = next((k for k in self.entries if not self.pinned(k)),
+                          None)
+            if victim is None:
+                return                       # everything left is pinned
+            self.bytes -= self.entry_bytes(self.entries.pop(victim))
+            self.stats["dropped_blocks"] += 1
 
 
 @dataclasses.dataclass
@@ -354,7 +450,7 @@ class BlockManager:
     def __init__(self, n_slots: int, block_size: int, n_blocks: int,
                  max_blocks_per_seq: int, prefix_cache: bool = False,
                  group_windows: tuple[int | None, ...] = (None,),
-                 mirror_sharding=None):
+                 mirror_sharding=None, host_pool: HostPool | None = None):
         assert block_size > 0 and n_blocks > 0
         assert group_windows and all(w is None or w > 0 for w in group_windows)
         self.n_slots = n_slots
@@ -399,8 +495,31 @@ class BlockManager:
         self.table_updates = 0           # table entries actually flushed
         self.prefix_stats = {"queries": 0, "lookup_tokens": 0,
                              "hit_tokens": 0, "blocks_shared": 0,
-                             "cow_forks": 0, "evictions": 0}
+                             "cow_forks": 0, "evictions": 0,
+                             "host_hit_blocks": 0}
         self.window_freed_blocks = 0     # blocks returned by window slides
+        # ---- tiered KV (HostPool docstring) ----------------------------
+        # host: the second tier; None disables spilling entirely.
+        # _spill_queue: (group, block, hash) of LRU-evicted registered
+        #   blocks whose bytes must be captured to the host tier BEFORE
+        #   the next cache-writing dispatch lands (the evicted id is
+        #   already reallocated — its bytes are intact only until then).
+        # restore_jobs: (group, dst block, hash, ticket) uploads the
+        #   engine drains through the scatter path under the SLO guard.
+        # _unrestored: (group, block) -> ticket for device blocks whose
+        #   bytes have NOT arrived yet; rows holding one are gated out
+        #   of chunk scheduling, and a stale ticket voids the job.
+        # _lo_pending: (group, block) -> hash for planar blocks whose
+        #   fp8 hi planes were restored eagerly but whose lo planes wait
+        #   for the first FP16-mode touch (host entry stays pinned).
+        self.host = host_pool if prefix_cache else None
+        self._spill_queue: list[tuple[int, int, int]] = []
+        self._spill_pending: set[tuple[int, int]] = set()
+        self.restore_jobs: collections.deque[tuple[int, int, int, int]] = \
+            collections.deque()
+        self._unrestored: dict[tuple[int, int], int] = {}
+        self._lo_pending: dict[tuple[int, int], int] = {}
+        self._ticket = 0
 
     # -- pool-level views ------------------------------------------------------
     @property
@@ -528,16 +647,40 @@ class BlockManager:
             h = self._hash_of.pop((g, b))
             del self._index[(g, h)]
             self.prefix_stats["evictions"] += 1
+            if self.host is not None:
+                # spill instead of discard: queue a d2h capture of the
+                # block's bytes (drained by the engine before the next
+                # cache-writing dispatch). Blocks already mirrored in
+                # the host tier — including lazily-pending lo planes,
+                # whose DEVICE lo bytes are garbage — skip the capture:
+                # the tier is inclusive, the host copy is the truth.
+                lo = self._lo_pending.pop((g, b), None)
+                if lo is not None:
+                    self.host.unpin((g, lo))
+                if (g, h) in self.host or (g, h) in self._spill_pending:
+                    pass
+                else:
+                    self._spill_queue.append((g, b, h))
+                    self._spill_pending.add((g, h))
             return b
         return None
 
     def _release_block(self, g: int, b: int) -> None:
         """Decref; park registered zero-ref blocks in the group's LRU
-        cache, return unregistered ones to the group's free list."""
+        cache, return unregistered ones to the group's free list. A
+        zero-ref block whose restore never completed holds garbage
+        bytes — it is deregistered and FREED (its restore job is voided
+        by the ticket check), never parked as matchable content."""
         self._ref[g][b] -= 1
         assert self._ref[g][b] >= 0, f"refcount underflow on block {g}/{b}"
         if self._ref[g][b] == 0:
-            if (g, b) in self._hash_of:
+            if (g, b) in self._unrestored:
+                self._forget_restore(g, b)
+                h = self._hash_of.pop((g, b), None)
+                if h is not None:
+                    del self._index[(g, h)]
+                self._free[g].append(b)
+            elif (g, b) in self._hash_of:
                 self._lru[g][b] = None       # most-recent end
             else:
                 self._free[g].append(b)
@@ -618,6 +761,11 @@ class BlockManager:
                 assert self._ref[gi][b] >= 0, \
                     f"refcount underflow on block {gi}/{b}"
                 if self._ref[gi][b] == 0:
+                    if (gi, b) in self._unrestored:
+                        self._forget_restore(gi, b)
+                    lo = self._lo_pending.pop((gi, b), None)
+                    if lo is not None:
+                        self.host.unpin((gi, lo))
                     h = self._hash_of.pop((gi, b), None)
                     if h is not None:
                         del self._index[(gi, h)]
@@ -732,6 +880,9 @@ class BlockManager:
                     if h is not None:
                         del self._index[(gi, h)]
                         self.prefix_stats["evictions"] += 1
+                    lo = self._lo_pending.pop((gi, b), None)
+                    if lo is not None:
+                        self.host.unpin((gi, lo))
             g.slid = min(g.slid, nb)
         seq.length = min(seq.length, n_tokens)
         return dropped
@@ -762,8 +913,9 @@ class BlockManager:
         return max(live)[1] if live else None
 
     # -- prefix caching --------------------------------------------------------
-    def _match_plan(self, tokens
-                    ) -> tuple[int, list[tuple[int, list[int]]], list[int]]:
+    def _match_plan(self, tokens, allow_host: bool = False
+                    ) -> tuple[int, list[tuple[int, list[int | None]]],
+                               list[int]]:
         """Group-aware longest servable cached prefix of `tokens`.
 
         Returns (matched tokens m, per-group (j_lo, block ids for
@@ -773,11 +925,24 @@ class BlockManager:
         cached block covering positions [q0 - window + 1, m); global
         groups (window None) need the whole from-root run [0, m).
         Slide-freed blocks were evicted from the index, so they can
-        never be matched for a local group here."""
+        never be matched for a local group here.
+
+        With `allow_host`, hashes absent from the device index but
+        present in the host tier (or queued for capture — the engine
+        always captures before it uploads) are servable too: their plan
+        entries are None, and `attach_prefix` allocates fresh device
+        blocks + restore jobs for them."""
         bs = self.block_size
         empty = [(0, []) for _ in self.group_windows]
         if not self.prefix_cache:
             return 0, empty, []
+        host = self.host if allow_host else None
+
+        def servable(gi: int, h: int) -> bool:
+            return (gi, h) in self._index or (
+                host is not None and ((gi, h) in host
+                                      or (gi, h) in self._spill_pending))
+
         hashes: list[int] = []
         parent = _ROOT_HASH
         for i in range(min(len(tokens) // bs, self.max_blocks_per_seq)):
@@ -790,13 +955,13 @@ class BlockManager:
                 continue
             run = 0
             for h in hashes:
-                if (gi, h) not in self._index:
+                if not servable(gi, h):
                     break
                 run += 1
             m = min(m, run)
         while m > 0:
             q0 = min(m * bs, len(tokens) - 1)
-            plan: list[tuple[int, list[int]]] | None = []
+            plan: list[tuple[int, list[int | None]]] | None = []
             # when a windowed group is missing block j, every candidate
             # m' in (j, m) still needs j (j_lo shrinks with m), so the
             # next viable candidate is m' = j — one jump per missing
@@ -804,10 +969,11 @@ class BlockManager:
             next_m = m - 1
             for gi, w in enumerate(self.group_windows):
                 j_lo = 0 if not w else max(0, q0 - w + 1) // bs
-                blks: list[int] = []
+                blks: list[int | None] = []
                 for j in range(j_lo, m):
                     b = self._index.get((gi, hashes[j]))
-                    if b is None:
+                    if b is None and not (host is not None
+                                          and servable(gi, hashes[j])):
                         plan = None
                         next_m = min(next_m, j)
                         break
@@ -820,11 +986,12 @@ class BlockManager:
             m = next_m
         return 0, empty, []
 
-    def lookup_prefix(self, tokens) -> int:
+    def lookup_prefix(self, tokens, allow_host: bool = False) -> int:
         """Matched-prefix length in tokens (no side effects) — the
         largest offset a prefill could resume at with every window
-        group's needed blocks cached."""
-        return self._match_plan(tokens)[0]
+        group's needed blocks cached (on device, or — with `allow_host`
+        — restorable from the host tier)."""
+        return self._match_plan(tokens, allow_host)[0]
 
     def prefix_admit_discount(self, tokens) -> tuple[int, ...]:
         """Per-group blocks the admission watermark may discount for
@@ -836,10 +1003,12 @@ class BlockManager:
         if not self.prefix_cache:
             return (0,) * self.n_groups
         _, plan, _ = self._match_plan(tokens)
-        return tuple(sum(1 for b in blks if self._ref[gi][b] > 0)
+        return tuple(sum(1 for b in blks
+                         if b is not None and self._ref[gi][b] > 0)
                      for gi, (_, blks) in enumerate(plan))
 
-    def attach_prefix(self, idx: int, tokens) -> int:
+    def attach_prefix(self, idx: int, tokens, allow_host: bool = False
+                      ) -> int:
         """Share the longest cached servable prefix of `tokens` into
         freshly-allocated slot `idx` (incref each matched block, pull
         zero-ref ones out of the LRU pool). Windowed groups attach only
@@ -847,30 +1016,77 @@ class BlockManager:
         start pre-slid below it. Returns the matched token count; the
         caller starts prefill at that offset (recomputing at least one
         token — `cow_for_write` forks the tail block if that recompute
-        lands in a shared one)."""
+        lands in a shared one).
+
+        With `allow_host`, prefix blocks living only in the host tier
+        are re-admitted: a fresh device block is allocated and
+        registered for each, a restore job is queued for the engine's
+        scatter-upload drain, and the block is marked unrestored (rows
+        holding one are gated out of chunk scheduling until the bytes
+        arrive). If the free pool cannot cover the host hits, the match
+        falls back to device-resident blocks only."""
         seq = self.seqs[idx]
         assert seq is not None and not any(g.blocks for g in seq.groups), \
             "attach before ensure"
         if not self.prefix_cache:
             return 0
-        m_tokens, plan, hashes = self._match_plan(tokens)
-        shared = 0
+        m_tokens, plan, hashes = self._match_plan(tokens, allow_host)
+        if allow_host:
+            # all-or-nothing feasibility for the host hits: the fresh
+            # blocks they need must come from the free list + LRU pool
+            # MINUS the plan's own device-matched LRU residents (about
+            # to be pulled out and increfed, so not allocatable)
+            for gi, (_, blks) in enumerate(plan):
+                need = sum(1 for b in blks if b is None)
+                lru_held = sum(1 for b in blks
+                               if b is not None and self._ref[gi][b] == 0)
+                if need > self.free_blocks(gi) - lru_held:
+                    m_tokens, plan, hashes = self._match_plan(tokens, False)
+                    break
+        shared = restored = 0
+        # pass 1: incref every device-matched block FIRST, so the host
+        # hits' allocations below can never reclaim a plan block out of
+        # the LRU pool
         for gi, (g, (j_lo, blks)) in enumerate(zip(seq.groups, plan)):
             g.blocks = [TRASH_BLOCK] * j_lo + list(blks)
             g.hashes = list(hashes)
             g.slid = j_lo
             for j, b in enumerate(blks, start=j_lo):
+                if b is None:
+                    continue
                 if self._ref[gi][b] == 0:
                     del self._lru[gi][b]
                 self._ref[gi][b] += 1
                 self._set_table(gi, idx, j, b)
             shared += len(blks)
+        # pass 2: allocate + queue a restore for each host hit
+        for gi, (g, (j_lo, blks)) in enumerate(zip(seq.groups, plan)):
+            for j, src in enumerate(blks, start=j_lo):
+                if src is not None:
+                    continue
+                b = self._alloc_block(gi)
+                assert b is not None, "host-hit feasibility pre-checked"
+                h = hashes[j]
+                self._ref[gi][b] = 1
+                self._index[(gi, h)] = b
+                self._hash_of[(gi, b)] = h
+                g.blocks[j] = b
+                self._set_table(gi, idx, j, b)
+                self._ticket += 1
+                self._unrestored[(gi, b)] = (self._ticket, h)
+                self.restore_jobs.append((gi, b, h, self._ticket))
+                if (gi, h) in self.host:
+                    self.host.pin((gi, h))   # spill-pending entries are
+                else:                        # pinned at capture time
+                    assert (gi, h) in self._spill_pending, (gi, h)
+                restored += 1
         seq.length = m_tokens
         st = self.prefix_stats
         st["queries"] += 1
         st["lookup_tokens"] += len(tokens)
         st["hit_tokens"] += m_tokens
         st["blocks_shared"] += shared
+        st["host_hit_blocks"] += restored
         return m_tokens
 
     def cow_for_write(self, idx: int, start: int, end: int
@@ -935,6 +1151,113 @@ class BlockManager:
                 g.hashes.append(h)
                 parent = h
 
+    # -- tiered KV: host offload + restore ------------------------------------
+    def _forget_restore(self, g: int, b: int) -> None:
+        """Void block (g, b)'s pending restore: drop the ticket (the
+        queued job dies at claim time) and release its host-entry pin.
+        A job against a still-spill-pending entry never took a pin (pins
+        are applied at capture, `store_spill`), so there is nothing to
+        release in that case."""
+        _, h = self._unrestored.pop((g, b))
+        if (g, h) in self.host and self.host.pinned((g, h)):
+            self.host.unpin((g, h))
+
+    def take_spills(self) -> list[tuple[int, int, int]]:
+        """Drain the (group, block, hash) capture queue. The caller
+        (engine `_flush_spills`) must gather + device_get these blocks'
+        pool bytes and hand them to `store_spill` BEFORE any
+        cache-writing dispatch — the evicted ids are already back in
+        circulation and their bytes survive only until the next write
+        lands."""
+        out, self._spill_queue = self._spill_queue, []
+        self._spill_pending.clear()
+        return out
+
+    def store_spill(self, g: int, h: int, planes: dict) -> None:
+        """Deposit one captured block in the host tier and apply the
+        pins any already-queued restore jobs deferred (a job created
+        while its entry was still spill-pending could not pin it)."""
+        self.host.put((g, h), planes)
+        pins = sum(1 for (gi, _b), (_t, hh) in self._unrestored.items()
+                   if gi == g and hh == h)
+        for _ in range(pins):
+            self.host.pin((g, h))
+
+    def claim_restore(self, g: int, b: int, h: int, ticket: int) -> bool:
+        """True iff a drained restore job is still wanted: the dst block
+        is still attached and the ticket is current (a release/preempt
+        of the holder voids the job — the block id may since have been
+        reallocated for something else entirely)."""
+        return self._unrestored.get((g, b)) == (ticket, h)
+
+    def finish_restore(self, g: int, b: int, h: int,
+                       lo_pending: bool = False) -> None:
+        """Mark block (g, b) device-resident again. `lo_pending`
+        (planar pools) records that only the fp8 hi planes were
+        uploaded: the host entry stays pinned as the lazy lo-plane
+        source until the first FP16-mode touch."""
+        del self._unrestored[(g, b)]
+        if lo_pending:
+            self._lo_pending[(g, b)] = h     # inherits the job's pin
+        else:
+            self.host.unpin((g, h))
+
+    def row_unrestored(self, idx: int) -> bool:
+        """Does slot `idx` hold any block whose restore has not landed?
+        The engine gates such rows out of chunk scheduling — a prefill
+        reading them would see garbage."""
+        seq = self.seqs[idx]
+        if seq is None or not self._unrestored:
+            return False
+        return any((gi, b) in self._unrestored
+                   for gi, g in enumerate(seq.groups) for b in g.blocks)
+
+    def take_lo_pending(self) -> list[tuple[int, int, int]]:
+        """Drain ALL lazily-deferred lo-plane uploads as (group, block,
+        hash) — the engine's first FP16-mode dispatch must be preceded
+        by these bytes. Host-entry pins transfer to the caller, which
+        unpins after the upload."""
+        out = [(g, b, h) for (g, b), h in self._lo_pending.items()]
+        self._lo_pending.clear()
+        return out
+
+    def take_lo_pending_for(self, pairs) -> list[tuple[int, int, int]]:
+        """Drain the lo-plane uploads for specific (group, block) pairs
+        — the write-range guard: a write into a lo-pending block must
+        not race a later whole-block lo scatter (the scatter would
+        clobber the fresh lo bytes with the stale host copy)."""
+        out = []
+        for g, b in pairs:
+            h = self._lo_pending.pop((g, b), None)
+            if h is not None:
+                out.append((g, b, h))
+        return out
+
+    def lo_pending_in_range(self, idx: int, start: int, end: int
+                            ) -> list[tuple[int, int]]:
+        """(group, block) pairs with deferred lo planes that the token
+        write range [start, end) on slot `idx` touches."""
+        if not self._lo_pending:
+            return []
+        seq = self.seqs[idx]
+        span = range(start // self.block_size, -(-end // self.block_size))
+        return [(gi, g.blocks[bi]) for gi, g in enumerate(seq.groups)
+                for bi in span if bi < len(g.blocks)
+                and (gi, g.blocks[bi]) in self._lo_pending]
+
+    def mirror_jobs(self) -> list[tuple[int, int, int]]:
+        """(group, block, hash) of every registered device block NOT yet
+        mirrored in the host tier — `save_prefix_store` captures these
+        (without evicting anything) so the serialized store covers the
+        whole prefix index. Unrestored blocks hold garbage and are
+        skipped (their content is already hosted by definition)."""
+        if self.host is None:
+            return []
+        return [(g, b, h) for (g, h), b in self._index.items()
+                if (g, h) not in self.host
+                and (g, h) not in self._spill_pending
+                and (g, b) not in self._unrestored]
+
     # -- invariant audit (tests) ----------------------------------------------
     def check_invariants(self) -> None:
         ref = [[0] * (self.n_blocks + 1) for _ in range(self.n_groups)]
@@ -980,6 +1303,35 @@ class BlockManager:
                     "live block below the slide point"
                 assert all(b != TRASH_BLOCK for b in g.blocks[g.slid:]), \
                     "hole above the slide point"
+        # tiered-KV: unrestored blocks are live and registered-or-voided,
+        # spill-pending entries are not yet hosted, lo-pending blocks are
+        # live or LRU-parked with a hosted (and pinned) source, and the
+        # host tier's pin/byte accounting is exact
+        for (g, b), (_t, h) in self._unrestored.items():
+            assert self._ref[g][b] > 0, f"unrestored block {g}/{b} unheld"
+            assert b not in self._free[g] and b not in self._lru[g]
+        qhashes = {(g, h) for g, _b, h in self._spill_queue}
+        assert qhashes == self._spill_pending, \
+            (qhashes, self._spill_pending)
+        if self.host is not None:
+            for g, h in self._spill_pending:
+                assert (g, h) not in self.host, \
+                    f"spill queued for already-hosted entry {g}/{h}"
+            for (g, b), h in self._lo_pending.items():
+                assert (g, h) in self.host, f"lo-pending {g}/{b} unsourced"
+                assert self.host.pinned((g, h)), f"lo source {g}/{h} unpinned"
+                assert self._ref[g][b] > 0 or b in self._lru[g], \
+                    f"lo-pending block {g}/{b} neither live nor cached"
+            want_pins: collections.Counter = collections.Counter()
+            for (g, _b), h in self._lo_pending.items():
+                want_pins[(g, h)] += 1
+            for (g, _b), (_t, h) in self._unrestored.items():
+                if (g, h) in self.host:
+                    want_pins[(g, h)] += 1
+            assert want_pins == self.host._pins, \
+                (dict(want_pins), dict(self.host._pins))
+            assert self.host.bytes == sum(
+                self.host.entry_bytes(p) for p in self.host.entries.values())
         if self._dev_tables is not None:
             # read-only check: overlay the pending dirty entries on the
             # mirror instead of flushing (device_tables() would mutate

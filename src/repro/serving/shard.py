@@ -47,6 +47,15 @@ def replicated(mesh) -> NamedSharding:
     return NamedSharding(mesh, P())
 
 
+def put_replicated(mesh, a):
+    """Place a host array on the mesh fully replicated. The tiered-KV
+    spill/restore operands (block-id vectors, stacked host plane bytes)
+    go through here so their uploads carry an explicit replicated
+    sharding — GSPMD must never partition control data, and the restore
+    scatter's donated pool keeps whatever sharding the pool already has."""
+    return jax.device_put(a, replicated(mesh))
+
+
 def shard_serving_params(params, cfg, mesh):
     """Commit a `to_serving` parameter tree onto the mesh via the
     training-path resolver (`param_spec` sees the same dict keys —

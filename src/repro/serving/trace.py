@@ -41,7 +41,9 @@ def azure_like(duration_s: float = 60.0, mean_rate: float = 5.0,
             jitter = rng.rand()
             plen = max(8, int(rng.lognormal(np.log(prompt_len), 0.4)))
             mnew = max(4, int(rng.lognormal(np.log(max_new), 0.3)))
-            reqs.append(TraceRequest(t + jitter, plen, mnew))
+            # clamp: jitter in the final second must not push an arrival
+            # past the trace end (callers size runs by duration_s)
+            reqs.append(TraceRequest(min(t + jitter, duration_s), plen, mnew))
         t += 1.0
     reqs.sort(key=lambda r: r.arrival_s)
     return reqs
@@ -56,9 +58,15 @@ def steady(duration_s: float, rate: float, seed: int = 0,
 
 
 def rate_stats(reqs: list[TraceRequest], duration_s: float) -> dict:
-    counts = np.zeros(int(duration_s) + 1)
+    """Per-second arrival-rate stats over exactly ceil(duration_s)
+    buckets. (The old `int(duration_s) + 1` sizing padded a phantom
+    final bucket: `mean_rate` was biased low by duration/(duration+1)
+    and the empty pad polluted `min_rate`.) An arrival clamped to
+    exactly `duration_s` counts in the last real second."""
+    nbins = max(int(np.ceil(duration_s)), 1)
+    counts = np.zeros(nbins)
     for r in reqs:
-        counts[int(r.arrival_s)] += 1
+        counts[min(int(r.arrival_s), nbins - 1)] += 1
     nz = counts[counts > 0]
     return {"mean_rate": float(counts.mean()),
             "max_rate": float(counts.max()),

@@ -161,14 +161,26 @@ class TestBlockManagerCOWInvariants:
     machinery (shared blocks survive for their other holders), the
     committed-hash chain never extends past the cut, slid holes stay
     holes, and the device table mirror keeps matching the host tables —
-    check_invariants audits all of it after every op."""
+    check_invariants audits all of it after every op.
+
+    The tiered-KV `spill`/`restore` ops drive the host tier in the same
+    bookkeeping form the engine uses (take_spills -> store_spill,
+    restore_jobs -> claim/finish, lazy lo drains): spilled entries are
+    content-tagged by their chain hash and must read back byte-identical
+    at restore (restored bytes == spilled bytes, host entries never
+    aliased or clobbered by allocator reuse of the evicted block id);
+    attach with allow_host exercises host-hit re-admission, and ops that
+    would WRITE a row's blocks honor the engine's row_unrestored gate.
+    check_invariants additionally audits tier conservation: spill queue
+    <-> pending set, exact host-entry pin accounting, exact host byte
+    totals, and lo-pending entries staying hosted + pinned."""
 
     @pytest.mark.parametrize("kind", ["gqa", "mla", "hybrid", "swa"])
     @settings(max_examples=40, deadline=None)
     @given(seed=st.integers(0, 2**31 - 1),
-           ops=st.lists(st.integers(0, 5), min_size=10, max_size=120))
+           ops=st.lists(st.integers(0, 8), min_size=10, max_size=120))
     def test_op_soup(self, kind, seed, ops):
-        from repro.serving.kvcache import BlockManager, SlotManager
+        from repro.serving.kvcache import BlockManager, HostPool, SlotManager
 
         desc = _descriptor(kind)
         assert (desc.bytes_per_token > 0) == bool(desc.planes)
@@ -177,7 +189,18 @@ class TestBlockManagerCOWInvariants:
         bm = BlockManager(n_slots=3, block_size=4,
                           n_blocks=10, max_blocks_per_seq=8,
                           prefix_cache=desc.prefix_cacheable,
-                          group_windows=desc.group_windows)
+                          group_windows=desc.group_windows,
+                          host_pool=HostPool()
+                          if desc.prefix_cacheable else None)
+
+        def tag(h):
+            # deterministic content tag: a restore must read back the
+            # exact bytes its spill deposited
+            return np.full((3, 4), h & 0xFF, np.uint8)
+
+        def capture_spills():
+            for g, b, h in bm.take_spills():
+                bm.store_spill(g, h, {"p": tag(h)})
         # slot-resident state side claimed/released in lockstep
         sm = SlotManager(3, 32) if desc.slot_planes else None
         # streams longer than the swa window (19) so slides actually fire
@@ -189,7 +212,8 @@ class TestBlockManagerCOWInvariants:
                 idx = bm.try_allocate(f"r{rng.randint(1 << 30)}", len(toks),
                                       4, bm.prefix_admit_discount(toks))
                 if idx is not None:
-                    matched = bm.attach_prefix(idx, toks)
+                    matched = bm.attach_prefix(
+                        idx, toks, allow_host=bool(rng.randint(2)))
                     assert desc.prefix_cacheable or matched == 0, \
                         "recurrent descriptor shared a prefix"
                     if sm is not None:
@@ -197,6 +221,10 @@ class TestBlockManagerCOWInvariants:
                     live.append(idx)
             elif op == 1 and live:
                 idx = live[rng.randint(len(live))]
+                # engine contract: rows holding unrestored blocks are
+                # gated out of chunk scheduling, so they never write
+                if bm.row_unrestored(idx):
+                    continue
                 toks = streams[rng.randint(len(streams))]
                 n = rng.randint(1, len(toks) + 1)
                 if bm.ensure(idx, max(n, bm.seqs[idx].length)) \
@@ -249,6 +277,40 @@ class TestBlockManagerCOWInvariants:
                     assert len(g.blocks) <= -(-n // bm.block_size)
                     assert len(g.hashes) <= n // bm.block_size
                     assert g.slid <= len(g.blocks)
+            elif op == 6 and bm.host is not None:
+                # engine spill-capture contract: drain the queue and
+                # deposit content-tagged bytes for each evicted block
+                before = bm.host.bytes
+                queued = len(bm._spill_queue)
+                capture_spills()
+                assert not bm._spill_queue and not bm._spill_pending
+                # inclusive tier: every captured block adds its bytes
+                # unless its hash was already hosted
+                assert bm.host.bytes >= before
+                assert len(bm.host) <= bm.host.stats["spilled_blocks"] \
+                    + bm.host.stats["loaded_blocks"], (queued, bm.host.stats)
+            elif op == 7 and bm.host is not None and bm.restore_jobs:
+                # engine restore-drain contract: capture first (a job may
+                # target a spill-pending entry), then claim + finish;
+                # restored bytes must equal the spilled bytes, unclobbered
+                # by any allocator reuse of the evicted block id
+                capture_spills()
+                while bm.restore_jobs:
+                    g, b, h, t = bm.restore_jobs.popleft()
+                    if not bm.claim_restore(g, b, h, t):
+                        continue             # voided by release/preempt
+                    entry = bm.host.get((g, h))
+                    assert (entry["p"] == tag(h)).all(), \
+                        "host entry aliased or clobbered"
+                    bm.finish_restore(g, b, h,
+                                      lo_pending=bool(rng.randint(2)))
+            elif op == 8 and bm.host is not None:
+                # lazy lo-plane drain: pins transfer to the uploader and
+                # are released once the bytes land
+                for g, b, h in bm.take_lo_pending():
+                    assert (g, h) in bm.host and bm.host.pinned((g, h))
+                    assert (bm.host.get((g, h))["p"] == tag(h)).all()
+                    bm.host.unpin((g, h))
             bm.check_invariants()
             if sm is not None:
                 assert set(sm.active()) == set(live), \

@@ -1,0 +1,400 @@
+"""Tiered KV: stable prefix hashing, host-offload spill/restore, and the
+restart-persistent prefix store.
+
+Covers the PR-9 tentpole end to end:
+
+* `_chain_hash`/`_ROOT_HASH` are stable blake2b content digests — two
+  processes with DIFFERENT `PYTHONHASHSEED`s agree on every chain hash
+  (the old process-salted `hash()` could never be persisted or shared).
+* Spill/restore bit-exactness: serving with the host tier on is
+  bit-identical to serving with it off when recompute happens in the
+  same precision mode, and bit-identical to an ample-pool engine (whose
+  blocks are never evicted at all) across an fp8 -> fp16 mode switch —
+  the case where recompute is NOT a valid baseline, because KV written
+  in fp8 mode legitimately differs from KV recomputed in fp16.
+* Planar (NestedKV) pools restore the fp8 hi plane eagerly and lo
+  planes lazily on the first FP16-mode touch.
+* The RestorePolicy SLO guard: max_queue_bytes=0 bounces every host
+  match to recompute (counted, outputs unchanged) and a per-step byte
+  cap spreads a big restore over steps without deadlock.
+* `Engine(persist_dir=...)` + `save_prefix_store()` survive a REAL
+  engine restart (subprocess): the second process gets host-tier prefix
+  hits and emits identical tokens.
+* `Engine.run(max_iters=...)` raises on exhaustion unless
+  `allow_partial=True`, recording `stats["iters_exhausted"]`, and
+  `trace.rate_stats`/`azure_like` bucket arrivals without the padded
+  final bucket or past-the-end arrivals.
+"""
+
+import json
+import os
+import subprocess
+import sys
+import textwrap
+
+import numpy as np
+import jax
+import pytest
+
+from repro.configs import ARCHS
+from repro.core.policy import RestorePolicy, SLOConfig
+from repro.models import model as M
+from repro.models.convert import to_serving
+from repro.serving import trace
+from repro.serving.engine import Engine, Request
+from repro.serving.kvcache import _ROOT_HASH, _chain_hash
+
+
+@pytest.fixture(scope="module")
+def tiny():
+    cfg = ARCHS["qwen1.5-0.5b"].reduced()
+    params = M.init_params(jax.random.PRNGKey(0), cfg)
+    return cfg, to_serving(params)
+
+
+def _mk(tiny, **kw):
+    cfg, params = tiny
+    kw.setdefault("n_slots", 2)
+    kw.setdefault("capacity", 128)
+    kw.setdefault("forced_mode", "fp16")
+    kw.setdefault("block_size", 16)
+    kw.setdefault("n_blocks", 11)
+    kw.setdefault("chunk_tokens", 64)
+    kw.setdefault("debug_invariants", True)
+    return Engine(cfg, params, **kw)
+
+
+def _sys_prompts(cfg):
+    rng = np.random.default_rng(0)
+    return (rng.integers(1, cfg.vocab_size, size=96).tolist(),
+            rng.integers(1, cfg.vocab_size, size=96).tolist())
+
+
+def _burst(cfg, sysp, tag, n=3, max_new=6):
+    return [Request(f"{tag}{i}",
+                    sysp + np.random.default_rng(7 * i + 1)
+                    .integers(1, cfg.vocab_size, size=8).tolist(), max_new)
+            for i in range(n)]
+
+
+def _serve_phases(e, cfg, phases):
+    """phases: [(tag, sys_prompt, mode|None), ...] — serve each burst to
+    completion, switching forced_mode when given."""
+    for tag, sysp, mode in phases:
+        if mode is not None:
+            e.forced_mode = mode
+        for r in _burst(cfg, sysp, tag):
+            e.submit(r)
+        e.run(max_iters=800)
+    return {r.request_id: tuple(r.output) for r in e.finished}
+
+
+# =============================================================================
+# stable chain hashes (the tentpole's prerequisite bugfix)
+# =============================================================================
+
+_HASH_SNIPPET = textwrap.dedent("""
+    import json, sys
+    from repro.serving.kvcache import _ROOT_HASH, _chain_hash
+    h1 = _chain_hash(_ROOT_HASH, tuple(range(16)))
+    h2 = _chain_hash(h1, tuple(range(16, 32)))
+    print(json.dumps([_ROOT_HASH, h1, h2]))
+""")
+
+
+class TestStableHash:
+    def test_digest_properties(self):
+        h = _chain_hash(_ROOT_HASH, (1, 2, 3))
+        assert isinstance(h, int)
+        assert h == _chain_hash(_ROOT_HASH, (1, 2, 3))
+        assert h != _chain_hash(_ROOT_HASH, (1, 2, 4))
+        assert h != _chain_hash(h, (1, 2, 3))
+        # int64 range: the digest must fit the block-table/index plumbing
+        assert -(2**63) <= h < 2**63
+        assert -(2**63) <= _ROOT_HASH < 2**63
+
+    def test_cross_process_stability_under_different_hashseed(self):
+        """The old process-salted hash() gave each PYTHONHASHSEED its own
+        chain hashes, so a persisted index could never round-trip. The
+        blake2b digests must agree across processes with different
+        seeds — this is what makes `persist_dir` possible at all."""
+        outs = []
+        for seed in ("1", "4242"):
+            env = dict(os.environ,
+                       PYTHONHASHSEED=seed,
+                       PYTHONPATH="src" + os.pathsep
+                       + os.environ.get("PYTHONPATH", ""))
+            r = subprocess.run([sys.executable, "-c", _HASH_SNIPPET],
+                               capture_output=True, text=True, env=env,
+                               check=True)
+            outs.append(json.loads(r.stdout))
+        assert outs[0] == outs[1], outs
+        # and the parent process (whatever ITS seed is) agrees too
+        h1 = _chain_hash(_ROOT_HASH, tuple(range(16)))
+        h2 = _chain_hash(h1, tuple(range(16, 32)))
+        assert outs[0] == [_ROOT_HASH, h1, h2]
+
+
+# =============================================================================
+# spill / restore correctness through the real engine
+# =============================================================================
+
+@pytest.mark.slow
+class TestSpillRestore:
+    def test_fp16_bit_exact_host_on_off(self, tiny):
+        """Same-mode recompute IS a valid baseline in fp16: an 11-block
+        pool forces sys1's blocks out when sys2 arrives (spill), and the
+        third burst re-admits sys1 from the host tier (restore). Every
+        token must match the host-off engine, which recomputes instead."""
+        cfg, _ = tiny
+        sys1, sys2 = _sys_prompts(cfg)
+        phases = [("a", sys1, None), ("b", sys2, None), ("c", sys1, None)]
+        e_on = _mk(tiny)
+        outs_on = _serve_phases(e_on, cfg, phases)
+        assert e_on.stats["spilled_blocks"] > 0, e_on.tiered_stats()
+        assert e_on.stats["restored_blocks"] > 0, e_on.tiered_stats()
+        assert e_on.blocks.prefix_stats["host_hit_blocks"] > 0
+        # flat (non-planar) pools restore every plane eagerly: a full
+        # spill->restore round trip moves the same bytes both ways
+        ts = e_on.tiered_stats()
+        if ts["restored_blocks"] == ts["spilled_blocks"]:
+            assert ts["restored_bytes"] == ts["spilled_bytes"], ts
+        e_off = _mk(tiny, host_offload=False)
+        outs_off = _serve_phases(e_off, cfg, phases)
+        assert outs_on == outs_off
+        assert e_off.stats["spilled_blocks"] == 0
+        assert e_off.tiered_stats()["enabled"] is False
+
+    def test_preempt_spill_restore_matches_ample_pool(self, tiny):
+        """Concurrent overload: more work than the pool can hold keeps
+        preempting the youngest sequence; its released prefix blocks
+        spill on eviction and restore on re-admission. The ample-pool
+        engine (nothing ever evicted, no preemption pressure from the
+        tier) is the ground truth."""
+        cfg, _ = tiny
+        sys1, _ = _sys_prompts(cfg)
+        def serve(**kw):
+            e = _mk(tiny, **kw)
+            for r in _burst(cfg, sys1, "p", n=5, max_new=24):
+                e.submit(r)
+            e.run(max_iters=2000)
+            return e, {r.request_id: tuple(r.output) for r in e.finished}
+        e_tier, outs_tier = serve(n_blocks=11, capacity=192)
+        _, outs_ample = serve(n_blocks=64, capacity=192)
+        assert outs_tier == outs_ample
+        assert e_tier.stats["preemptions"] > 0, e_tier.stats
+
+    def test_planar_lazy_lo_on_fp8_to_fp16_switch(self, tiny):
+        """NestedKV planar pools: fp8-mode serving restores hi planes
+        only (half the h2d), and the first FP16-mode step lazily lands
+        the lo planes of every hi-only-restored block. Baseline is the
+        ample-pool engine — recompute is NOT valid here, because blocks
+        written under fp8 activations differ from fp16-recomputed ones
+        (true for plain device prefix hits too)."""
+        cfg, _ = tiny
+        sys1, sys2 = _sys_prompts(cfg)
+        phases = [("a", sys1, "fp8"), ("b", sys2, None), ("c", sys1, None),
+                  ("d", sys2, "fp16")]
+        e = _mk(tiny, kv_planar=True, forced_mode="fp8")
+        outs_tier = _serve_phases(e, cfg, phases)
+        ts = e.tiered_stats()
+        assert ts["restored_blocks"] > 0 and ts["lo_lazy_blocks"] > 0, ts
+        # hi-plane-only eager restore really halves the h2d per block:
+        # the lazy lo completion of each block costs the same bytes the
+        # eager hi restore did (planar planes are same-shape uint8)
+        per_block_hi = ts["restored_bytes"] // ts["restored_blocks"]
+        assert ts["lo_lazy_bytes"] == ts["lo_lazy_blocks"] * per_block_hi, ts
+        e2 = _mk(tiny, kv_planar=True, forced_mode="fp8", n_blocks=64)
+        outs_ample = _serve_phases(e2, cfg, phases)
+        assert outs_tier == outs_ample
+
+    def test_slo_guard_falls_back_to_recompute(self, tiny):
+        """max_queue_bytes=0 disables host matching: every would-be host
+        hit is counted as a fallback and recomputed — outputs identical
+        to the host-off engine, tier still fills (persistence path)."""
+        cfg, _ = tiny
+        sys1, sys2 = _sys_prompts(cfg)
+        phases = [("a", sys1, None), ("b", sys2, None), ("c", sys1, None)]
+        e = _mk(tiny, restore_policy=RestorePolicy(max_queue_bytes=0))
+        outs = _serve_phases(e, cfg, phases)
+        ts = e.tiered_stats()
+        assert ts["restored_blocks"] == 0, ts
+        assert ts["restore_fallbacks"] > 0, ts
+        assert ts["spilled_blocks"] > 0, ts
+        outs_off = _serve_phases(_mk(tiny, host_offload=False), cfg, phases)
+        assert outs == outs_off
+
+    def test_tiny_per_step_grant_spreads_restores_without_deadlock(
+            self, tiny):
+        """A 1-byte per-step grant forces the liveness floor: the drain
+        still takes one block per step, so gated rows always make
+        progress and outputs stay bit-exact."""
+        cfg, _ = tiny
+        sys1, sys2 = _sys_prompts(cfg)
+        phases = [("a", sys1, None), ("b", sys2, None), ("c", sys1, None)]
+        e = _mk(tiny, restore_policy=RestorePolicy(
+            max_restore_bytes_per_step=1))
+        outs = _serve_phases(e, cfg, phases)
+        assert e.stats["restored_blocks"] > 0, e.tiered_stats()
+        outs_off = _serve_phases(_mk(tiny, host_offload=False), cfg, phases)
+        assert outs == outs_off
+
+    def test_host_pool_cap_drops_oldest_and_stays_correct(self, tiny):
+        """A one-block host budget keeps dropping entries (drop-oldest,
+        pinned entries skipped); misses just recompute."""
+        cfg, _ = tiny
+        sys1, sys2 = _sys_prompts(cfg)
+        phases = [("a", sys1, None), ("b", sys2, None), ("c", sys1, None)]
+        # one block's bytes: 2 planes (k,v) f16 * layers * 16 tokens
+        e_probe = _mk(tiny)
+        cap = max(e_probe._eager_block_bytes.values())
+        e = _mk(tiny, host_bytes=cap)
+        outs = _serve_phases(e, cfg, phases)
+        assert e.blocks.host.bytes <= cap
+        assert e.blocks.host.stats["dropped_blocks"] > 0
+        outs_off = _serve_phases(_mk(tiny, host_offload=False), cfg, phases)
+        assert outs == outs_off
+
+    def test_from_slo_budget_scales_with_tpot(self):
+        p = RestorePolicy.from_slo(SLOConfig(tpot_ms=10.0), h2d_gbps=10.0,
+                                   frac=0.5, queue_steps=4)
+        assert p.max_restore_bytes_per_step == int(0.010 * 0.9 * 0.5
+                                                   * 10e9)
+        assert p.max_queue_bytes == p.max_restore_bytes_per_step * 4
+        assert p.admit(0) and not p.admit(p.max_queue_bytes)
+
+
+# =============================================================================
+# restart persistence (subprocess: a REAL second process)
+# =============================================================================
+
+_PERSIST_SNIPPET = textwrap.dedent("""
+    import json, sys
+    import numpy as np
+    import jax
+    from repro.configs import ARCHS
+    from repro.models import model as M
+    from repro.models.convert import to_serving
+    from repro.serving.engine import Engine, Request
+
+    persist_dir, save = sys.argv[1], sys.argv[2] == "save"
+    cfg = ARCHS["qwen1.5-0.5b"].reduced()
+    params = to_serving(M.init_params(jax.random.PRNGKey(0), cfg))
+    e = Engine(cfg, params, n_slots=2, capacity=128, forced_mode="fp16",
+               block_size=16, n_blocks=24, chunk_tokens=64,
+               debug_invariants=True, persist_dir=persist_dir)
+    rng = np.random.default_rng(0)
+    sysp = rng.integers(1, cfg.vocab_size, size=96).tolist()
+    for i in range(3):
+        tail = np.random.default_rng(7 * i + 1).integers(
+            1, cfg.vocab_size, size=8).tolist()
+        e.submit(Request(f"r{i}", sysp + tail, 6))
+    e.run(max_iters=800)
+    if save:
+        e.save_prefix_store()
+    print(json.dumps({
+        "outputs": {r.request_id: r.output for r in e.finished},
+        "host_hit_blocks": e.blocks.prefix_stats["host_hit_blocks"],
+        "hit_tokens": e.blocks.prefix_stats["hit_tokens"],
+        "restored_blocks": e.stats["restored_blocks"]}))
+""")
+
+
+@pytest.mark.slow
+class TestRestartPersistence:
+    def test_prefix_hits_survive_engine_restart(self, tmp_path):
+        """Two separate python processes, different hash seeds: the
+        first serves a shared-prefix burst and persists its prefix
+        store; the second loads it, re-admits the system prompt from
+        the host tier WITHOUT recomputing it, and emits byte-identical
+        tokens."""
+        def run(save, seed):
+            env = dict(os.environ,
+                       PYTHONHASHSEED=seed,
+                       PYTHONPATH="src" + os.pathsep
+                       + os.environ.get("PYTHONPATH", ""))
+            r = subprocess.run(
+                [sys.executable, "-c", _PERSIST_SNIPPET, str(tmp_path),
+                 "save" if save else "load"],
+                capture_output=True, text=True, env=env)
+            assert r.returncode == 0, r.stderr[-2000:]
+            return json.loads(r.stdout.splitlines()[-1])
+        first = run(save=True, seed="1")
+        assert (tmp_path / "prefix_store.npz").exists()
+        assert (tmp_path / "prefix_store.json").exists()
+        assert first["host_hit_blocks"] == 0
+        second = run(save=False, seed="31337")
+        # prefix hit-rate SURVIVED the restart: the system prompt came
+        # back from the persisted host tier, not from recompute
+        assert second["host_hit_blocks"] > 0, second
+        assert second["restored_blocks"] > 0, second
+        assert second["hit_tokens"] >= first["hit_tokens"], (first, second)
+        assert second["outputs"] == first["outputs"]
+
+    def test_meta_mismatch_ignores_store(self, tiny, tmp_path):
+        """A store persisted under one layout must never be joined with
+        a different one: corrupt the meta fingerprint and the load must
+        be a clean no-op."""
+        cfg, _ = tiny
+        sys1, _ = _sys_prompts(cfg)
+        e = _mk(tiny, n_blocks=24, persist_dir=str(tmp_path))
+        for r in _burst(cfg, sys1, "s"):
+            e.submit(r)
+        e.run(max_iters=800)
+        assert e.save_prefix_store() > 0
+        meta = json.loads((tmp_path / "prefix_store.json").read_text())
+        meta["block_size"] = 8
+        (tmp_path / "prefix_store.json").write_text(json.dumps(meta))
+        e2 = _mk(tiny, n_blocks=24, persist_dir=str(tmp_path))
+        assert len(e2.blocks.host) == 0
+        assert e2._load_prefix_store(str(tmp_path)) == 0
+
+
+# =============================================================================
+# run(max_iters) exhaustion + trace stats bugfixes (satellites)
+# =============================================================================
+
+class TestRunExhaustion:
+    def test_raises_and_records_when_cap_hit(self, tiny):
+        cfg, _ = tiny
+        e = _mk(tiny, host_offload=False)
+        e.submit(Request("r0", list(range(1, 40)), 64))
+        with pytest.raises(RuntimeError, match="max_iters"):
+            e.run(max_iters=3)
+        assert e.stats["iters_exhausted"] > 0
+        # allow_partial: same situation reports instead of raising
+        e2 = _mk(tiny, host_offload=False)
+        e2.submit(Request("r0", list(range(1, 40)), 64))
+        done = e2.run(max_iters=3, allow_partial=True)
+        assert e2.stats["iters_exhausted"] > 0
+        assert len(done) == 0
+
+    def test_clean_completion_leaves_zero(self, tiny):
+        e = _mk(tiny, host_offload=False)
+        e.submit(Request("r0", list(range(1, 20)), 4))
+        done = e.run(max_iters=400)
+        assert [r.request_id for r in done] == ["r0"]
+        assert e.stats["iters_exhausted"] == 0
+
+
+class TestTraceStats:
+    def test_rate_stats_unbiased_mean(self):
+        reqs = [trace.TraceRequest(t + 0.5, 8, 8) for t in range(10)]
+        s = trace.rate_stats(reqs, duration_s=10.0)
+        # 10 requests over 10 s is EXACTLY 1 req/s — the old padded
+        # bucket reported 10/11 and a phantom min of 0
+        assert s["mean_rate"] == pytest.approx(1.0)
+        assert s["min_rate"] == 1.0
+        assert s["max_rate"] == 1.0
+
+    def test_rate_stats_fractional_duration_and_edge_arrival(self):
+        s = trace.rate_stats([trace.TraceRequest(2.5, 8, 8),
+                              trace.TraceRequest(3.0, 8, 8)], 3.0)
+        assert s["max_rate"] == 2.0          # both land in the last bin
+        assert s["mean_rate"] == pytest.approx(2 / 3)
+
+    def test_azure_like_never_past_duration(self):
+        for seed in range(5):
+            reqs = trace.azure_like(duration_s=7.0, seed=seed)
+            assert all(r.arrival_s <= 7.0 for r in reqs)
+            trace.rate_stats(reqs, 7.0)      # in-range for every bucket
