@@ -44,6 +44,7 @@ def run() -> list[dict]:
     rows.append(measured_mla_engine())
     rows.append(measured_gemma3_engine())
     rows.append(measured_engine_trace())
+    rows.extend(measured_router_chaos())
     return rows
 
 
@@ -210,6 +211,106 @@ def measured_engine_trace(duration_s: float = 3.0, mean_rate: float = 3.0,
             "prefix_hit_rate": round(ps["hit_rate"], 3),
             "blocks_saved": ps["blocks_saved"],
             "peak_block_util": round(eng.stats["peak_block_util"], 3)}
+
+
+def _chaos_run(degrade: bool, *, duration_s: float, mean_rate: float,
+               seed: int, kill_step: int, slo_tpot_ms: float):
+    """One 3-replica chaos run over a shared VirtualClock: arrival-gated
+    submission, a planned kill of replica 0 mid-burst, and per-step
+    clock advance from the modeled cost of the slowest replica — so the
+    degrade-vs-no-degrade comparison is an exact function of the
+    schedule, not host noise."""
+    import numpy as np
+
+    from repro.core.policy import DegradePolicy
+    from repro.serving.engine import Request
+    from repro.serving.faults import FaultEvent, FaultPlan
+    from repro.serving.router import Router, StepCostModel, VirtualClock
+
+    vc = VirtualClock()
+    engines = [_tiny_engine(n_slots=8, capacity=192, clock=vc,
+                            block_size=16, n_blocks=24, chunk_tokens=64)
+               for _ in range(3)]
+    policy = DegradePolicy(force_fp8=True, shed_budget_tokens=2048,
+                           restore_scale=0.5, hysteresis_steps=8) \
+        if degrade else None
+    router = Router(engines,
+                    policy=policy,
+                    plan=FaultPlan([FaultEvent(kill_step, 0, "kill")]),
+                    clock=vc,
+                    cost_model=StepCostModel(
+                        fixed_ms=2.0,
+                        ms_per_token={"fp16": 4.0, "fp8": 2.0}),
+                    affinity_blocks=1, balance_slack_tokens=96)
+    treqs = trace.azure_like(duration_s=duration_s, mean_rate=mean_rate,
+                             seed=seed, prompt_len=12, max_new=40)
+    rng = np.random.RandomState(seed)
+    sys_prompt = list(rng.randint(1, 400, 8))
+    pending = collections.deque(
+        (tr, sys_prompt + list(rng.randint(1, 400, max(1, tr.prompt_len))),
+         max(1, tr.max_new)) for tr in treqs)
+    submitted = []
+    while pending or router.in_flight():
+        if pending and not router.in_flight():
+            vc.advance(max(0.0, pending[0][0].arrival_s - vc.now))
+        while pending and pending[0][0].arrival_s <= vc.now:
+            tr, toks, mnew = pending.popleft()
+            req = Request(f"t{len(submitted)}", toks, max_new=mnew,
+                          arrival_s=tr.arrival_s)
+            submitted.append(req)
+            router.submit(req)
+        router.step()
+    done = {r.request_id for r in router.finished}
+    ttft = np.asarray([r.first_token_s - r.arrival_s for r in submitted
+                       if r.request_id in done])
+    tpot = np.concatenate([np.diff(r.token_times) for r in submitted
+                           if r.request_id in done
+                           and len(r.token_times) > 1])
+    return {"stats": router.stats(),
+            "submitted": len(submitted),
+            "p90_ttft_ms": round(float(np.percentile(ttft, 90)) * 1e3, 1),
+            "p90_tpot_ms": round(float(np.percentile(tpot, 90)) * 1e3, 1),
+            "slo_tpot_ms": slo_tpot_ms}
+
+
+def measured_router_chaos(duration_s: float = 2.0, mean_rate: float = 7.0,
+                          seed: int = 11, kill_step: int = 14,
+                          slo_tpot_ms: float = 33.3) -> list[dict]:
+    """Kill 1 of 3 replicas mid-burst, twice: once with the
+    DegradePolicy driving FP8 on the survivors and once without. Three
+    rows: the full chaos accounting, the conservation invariant
+    (`failover_lost_requests` — MUST be 0), and the SLO comparison
+    (`degraded_p90_tpot`: degrade holds p90 TPOT within the SLO where
+    the no-degrade router violates it)."""
+    deg = _chaos_run(True, duration_s=duration_s, mean_rate=mean_rate,
+                     seed=seed, kill_step=kill_step,
+                     slo_tpot_ms=slo_tpot_ms)
+    raw = _chaos_run(False, duration_s=duration_s, mean_rate=mean_rate,
+                     seed=seed, kill_step=kill_step,
+                     slo_tpot_ms=slo_tpot_ms)
+    ds, rs = deg["stats"], raw["stats"]
+    rows = [
+        {"name": "router/chaos_failover",
+         "replicas": 3, "kill_step": kill_step,
+         "submitted": ds["submitted"], "completed": ds["completed"],
+         "shed": ds["shed"], "kills": ds["kills"],
+         "failovers": ds["failovers"],
+         "failover_requests": ds["failover_requests"],
+         "failover_restored_tokens": ds["failover_restored_tokens"],
+         "failover_recomputed_tokens": ds["failover_recomputed_tokens"],
+         "degrade_fp8_steps": ds["degrade_fp8_steps"],
+         "fp8_dwell": ds["fp8_dwell"],
+         "p90_ttft_ms": deg["p90_ttft_ms"]},
+        {"name": "router/failover_lost_requests",
+         "value": max(ds["lost"], rs["lost"]),
+         "degrade_lost": ds["lost"], "no_degrade_lost": rs["lost"]},
+        {"name": "router/degraded_p90_tpot",
+         "value": deg["p90_tpot_ms"], "slo_tpot_ms": slo_tpot_ms,
+         "no_degrade_p90_tpot_ms": raw["p90_tpot_ms"],
+         "holds_slo": bool(deg["p90_tpot_ms"] <= slo_tpot_ms),
+         "no_degrade_holds": bool(raw["p90_tpot_ms"] <= slo_tpot_ms)},
+    ]
+    return rows
 
 
 if __name__ == "__main__":

@@ -108,7 +108,13 @@ DEFAULT_HOT_ROOTS = ["repro.serving.engine.Engine.step",
                      # nfp-ignore on its device_get), and the restore
                      # drain must stay scatter-dispatch + bookkeeping
                      "repro.serving.engine.Engine._flush_spills",
-                     "repro.serving.engine.Engine._drain_restores"]
+                     "repro.serving.engine.Engine._drain_restores",
+                     # the multi-replica router steps EVERY replica from
+                     # one host loop, and its failover drain runs while
+                     # survivors still serve traffic: a sync in either
+                     # stalls the whole fleet, not one engine
+                     "repro.serving.router.Router.step",
+                     "repro.serving.engine.Engine.drain_requests"]
 
 
 def _host_safe_arg(arg: ast.AST, mod: Module) -> bool:

@@ -195,6 +195,78 @@ class RestorePolicy:
         return cls(max_restore_bytes_per_step=max(per_step, 1),
                    max_queue_bytes=max(per_step * queue_steps, 1))
 
+    def scaled(self, scale: float) -> RestorePolicy:
+        """A tightened (or relaxed) copy — the DegradePolicy swaps this
+        in on survivors while the fleet runs short-handed: restore h2d
+        traffic competes with the extra decode load, so both the
+        per-step grant and the admission backlog shrink together."""
+        return RestorePolicy(
+            max_restore_bytes_per_step=max(
+                1, int(self.max_restore_bytes_per_step * scale)),
+            max_queue_bytes=max(1, int(self.max_queue_bytes * scale)))
+
+
+# =============================================================================
+# fleet-level graceful degradation (serving/router.py)
+# =============================================================================
+
+@dataclasses.dataclass
+class DegradeDecision:
+    """What the router applies to SURVIVOR replicas this step."""
+    active: bool                     # running short-handed (or dwelling)
+    force_fp8: bool                  # pin survivors to FP8
+    shed_budget_tokens: int | None   # per-replica outstanding-token cap
+                                     # for NEW admissions (None: admit all)
+    restore_scale: float             # RestorePolicy tightening factor
+
+
+class DegradePolicy:
+    """Fleet-capacity analogue of the `DualPrecisionController`: when
+    live replicas drop below the fleet size, survivors absorb the dead
+    replica's load — NestedFP makes FP8 the free knob for that (same
+    weights, iteration-granular switch), admission shedding bounds the
+    backlog a survivor may accumulate, and tightened restore grants keep
+    host-tier h2d traffic from competing with the extra decode work.
+
+    Recovery uses the same hysteresis discipline the dual-precision
+    controller applies to FP16 re-probes: after capacity returns, the
+    degraded regime DWELLS for `hysteresis_steps` more steps before
+    FP16 (and full grants/admissions) are probed again — a flapping
+    replica must not flap the fleet's precision with it."""
+
+    def __init__(self, *, force_fp8: bool = True,
+                 shed_budget_tokens: int | None = None,
+                 restore_scale: float = 0.5,
+                 hysteresis_steps: int = 8):
+        self.force_fp8 = force_fp8
+        self.shed_budget_tokens = shed_budget_tokens
+        self.restore_scale = restore_scale
+        self.hysteresis_steps = hysteresis_steps
+        self.active = False
+        self._dwell = 0
+        self.history: list[bool] = []
+
+    def decide(self, live: int, total: int) -> DegradeDecision:
+        if live < total:
+            self.active = True
+            self._dwell = self.hysteresis_steps
+        elif self.active:
+            self._dwell -= 1
+            if self._dwell <= 0:
+                self.active = False
+        self.history.append(self.active)
+        return DegradeDecision(
+            active=self.active,
+            force_fp8=self.force_fp8 and self.active,
+            shed_budget_tokens=self.shed_budget_tokens if self.active
+            else None,
+            restore_scale=self.restore_scale if self.active else 1.0)
+
+    def degraded_step_fraction(self) -> float:
+        if not self.history:
+            return 0.0
+        return sum(self.history) / len(self.history)
+
 
 # =============================================================================
 

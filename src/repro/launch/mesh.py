@@ -55,6 +55,24 @@ def make_serving_mesh(model: int | None = None):
     return make_compat_mesh((n,), ("model",), devices=devs[:n])
 
 
+def make_replica_meshes(n_replicas: int, model: int):
+    """Disjoint 1-D ("model",) mesh slices for data-parallel engine
+    replicas behind `serving.router.Router`: replica i owns devices
+    [i*model, (i+1)*model). Replication is the ROUTER's job (placement,
+    failover), not GSPMD's — each slice is its own single-program mesh,
+    so a dead replica's devices take nothing else down with them."""
+    devs = jax.devices()
+    need = n_replicas * model
+    if len(devs) < need:
+        raise RuntimeError(
+            f"{n_replicas} replica meshes of {model} devices need {need}, "
+            f"have {len(devs)}; force the host device count BEFORE any "
+            "jax import")
+    return [make_compat_mesh((model,), ("model",),
+                             devices=devs[i * model:(i + 1) * model])
+            for i in range(n_replicas)]
+
+
 def data_axes(mesh) -> tuple[str, ...]:
     """All batch-parallel axes of a mesh (pod folds into data)."""
     return tuple(a for a in mesh.axis_names if a in ("pod", "data"))

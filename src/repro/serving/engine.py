@@ -201,7 +201,8 @@ class Engine:
                  host_offload: bool = True,
                  host_bytes: int | None = None,
                  restore_policy: RestorePolicy | None = None,
-                 persist_dir: str | None = None):
+                 persist_dir: str | None = None,
+                 fault_hook: Callable[["Engine"], None] | None = None):
         # mesh (launch.mesh.make_serving_mesh): drive an N-chip
         # tensor-parallel mesh as ONE logical device — weights and the
         # paged pool are committed to sharded layouts here (serving/
@@ -284,8 +285,24 @@ class Engine:
                       "spilled_blocks": 0, "spilled_bytes": 0,
                       "restored_blocks": 0, "restored_bytes": 0,
                       "lo_lazy_blocks": 0, "lo_lazy_bytes": 0,
-                      "restore_fallbacks": 0, "iters_exhausted": 0}
+                      "restore_fallbacks": 0, "iters_exhausted": 0,
+                      # host-tier entries whose checksum failed at
+                      # restore-drain time: the owning rows were
+                      # preempted back to recompute (never served
+                      # corrupt KV, never crashed)
+                      "corrupt_fallbacks": 0}
         self._last_step_ms: float | None = None
+        # failure-injection seam (serving/faults.py): called at the very
+        # top of _step_inner, BEFORE any state mutates — an InjectedFault
+        # raised here leaves the engine drainable. Stall faults add
+        # virtual milliseconds to the step instead of raising:
+        # inject_stall_ms is consumed into _last_step_ms (so the
+        # dual-precision controller sees the slowdown) and surfaced to
+        # the router as last_stall_ms.
+        self.fault_hook = fault_hook
+        self.inject_stall_ms = 0.0
+        self.last_stall_ms = 0.0
+        self.last_mode: str | None = None
         # attn_backend="pallas" serves planar GQA decode through the
         # block-table scalar-prefetch kernel (layers.attention "paged");
         # anything it cannot serve falls back to the ref gather path.
@@ -461,9 +478,64 @@ class Engine:
 
     # -- public API -----------------------------------------------------------
     def submit(self, req: Request) -> None:
+        """Enqueue one request, validating it up front: a malformed
+        request must fail HERE with a clear error, not steps later as a
+        scheduling failure deep inside `_plan_chunks`/`try_allocate`."""
         if not req.tokens:
             raise ValueError(f"request {req.request_id}: empty prompt")
+        if req.max_new <= 0:
+            raise ValueError(
+                f"request {req.request_id}: max_new={req.max_new} must be "
+                f"positive — a request that may emit nothing can never "
+                f"retire")
+        total = len(req.tokens) + req.max_new
+        if total > self.capacity:
+            raise ValueError(
+                f"request {req.request_id}: prompt ({len(req.tokens)}) + "
+                f"max_new ({req.max_new}) = {total} exceeds per-sequence "
+                f"capacity {self.capacity}")
+        bm = self.blocks
+        if any(bm._group_need(total, w) > bm.n_blocks
+               for w in bm.group_windows):
+            raise ValueError(
+                f"request {req.request_id}: needs more KV blocks than a "
+                f"whole group pool holds ({bm.n_blocks}) — the pool can "
+                f"never cover it")
         self.queue.append(req)
+
+    def drain_requests(self) -> list[Request]:
+        """Evacuate every in-flight request (admission order, then
+        queue order), releasing all KV blocks and slots — the router's
+        failover export. Outputs are sanitized (a trailing `_PENDING`
+        placeholder from an interrupted step is dropped along with its
+        timing/mode entries) so a survivor can resubmit each request
+        as-is: re-prefilling prompt + emitted-so-far continues greedy
+        generation exactly (`_plan_chunks` replay invariant)."""
+        order = sorted(set(self.active) | set(self.prefilling),
+                       key=lambda i: self.blocks.seqs[i].admitted)
+        out: list[Request] = []
+        for idx in order:
+            if idx in self.active:
+                out.append(self.active.pop(idx))
+            else:
+                out.append(self.prefilling.pop(idx).req)
+            self.blocks.release(idx)
+            if self.slot_state is not None:
+                self.slot_state.release(idx)
+            self.lens[idx] = 0
+        out.extend(self.queue)
+        self.queue.clear()
+        for req in out:
+            while req.output and req.output[-1] == _PENDING:
+                req.output.pop()
+                if req.token_times:
+                    req.token_times.pop()
+                if req.modes:
+                    req.modes.pop()
+            if not req.output:
+                req.first_token_s = None     # the dropped placeholder was
+                                             # the "first token"
+        return out
 
     def run(self, max_iters: int = 10_000,
             allow_partial: bool = False) -> list[Request]:
@@ -520,6 +592,17 @@ class Engine:
                 s["decode_tokens"] / s["decode_rows"]
                 if s["decode_rows"] else 0.0,
                 "k": self._spec_k.k if self._spec_k else 0}
+
+    @property
+    def restore_policy(self) -> RestorePolicy:
+        """The live SLO guard on the tiered-KV restore path — swappable
+        at runtime (the router's DegradePolicy tightens it on survivors
+        while the fleet runs short-handed, and restores it after)."""
+        return self._restore_policy
+
+    @restore_policy.setter
+    def restore_policy(self, policy: RestorePolicy) -> None:
+        self._restore_policy = policy
 
     # -- tiered KV: spill / restore / persist ---------------------------------
     def tiered_stats(self) -> dict:
@@ -654,6 +737,12 @@ class Engine:
             if not bm.claim_restore(g, b, h, t):
                 bm.restore_jobs.popleft()    # voided by release/preempt
                 continue
+            if not bm.host_ok(g, h):
+                # checksum mismatch: never scatter these bytes — preempt
+                # the owners back to recompute and drop the entry
+                bm.restore_jobs.popleft()
+                self._corrupt_fallback(g, b, h)
+                continue
             cost = self._eager_block_bytes[g]
             if spent and spent + cost > budget:
                 break
@@ -667,6 +756,42 @@ class Engine:
                 bm.finish_restore(g, b, h, lo_pending=lazy)
             self.stats["restored_blocks"] += len(items)
             self.stats["restored_bytes"] += nbytes
+
+    def _corrupt_fallback(self, g: int, b: int, h: int) -> None:
+        """A claimed restore's host bytes failed their checksum: preempt
+        every row holding the destination block (requeued rows re-prefill
+        prompt + emitted-so-far — the replay invariant makes the
+        recompute continuation exact), then drop the poisoned entry so
+        future matches recompute too. Counted, never raised, and never
+        a wrong token: the garbage bytes are never scattered."""
+        bm = self.blocks
+        for idx in bm.rows_holding(g, b):
+            self._preempt(idx)
+        if (g, h) in bm.host and not bm.host.pinned((g, h)):
+            bm.host.discard((g, h))
+        self.stats["corrupt_fallbacks"] += 1
+
+    def _sweep_corrupt_lo(self) -> None:
+        """Integrity-sweep deferred lo-plane sources at the top of the
+        step — BEFORE planning, where preemption is safe. A corrupt
+        entry's block is purged (its device hi planes may be fine, but
+        fp16 would join garbage lo bytes), its owner rows recompute, and
+        the entry is dropped; the mid-step lo-upload sites may then
+        trust whatever they drain."""
+        bm = self.blocks
+        if not (self._host_tier and self._lo_planes and bm._lo_pending):
+            return
+        for (g, b), h in list(bm._lo_pending.items()):
+            if bm.host.verify((g, h)):
+                continue
+            del bm._lo_pending[(g, b)]
+            bm.host.unpin((g, h))
+            for idx in bm.rows_holding(g, b):
+                self._preempt(idx)
+            bm.purge_block(g, b)
+            if not bm.host.pinned((g, h)):
+                bm.host.discard((g, h))
+            self.stats["corrupt_fallbacks"] += 1
 
     def _upload_lo(self, triples: list[tuple[int, int, int]]) -> None:
         """Complete deferred lo planes for (group, block, hash) triples
@@ -785,10 +910,16 @@ class Engine:
             self._step_inner()
 
     def _step_inner(self) -> None:
+        if self.fault_hook is not None:
+            # containment point: nothing has mutated yet, so a raise
+            # here (InjectedFault or a real defect surfaced by the
+            # harness) leaves the engine fully drainable
+            self.fault_hook(self)
         self.iteration += 1
         t0 = self.clock()
         # land queued host-tier restores first (SLO-bounded): rows whose
         # blocks finish restoring here become schedulable this very step
+        self._sweep_corrupt_lo()
         self._drain_restores()
         plan = self._plan_chunks()
         mode = self._mode(len(self.active),
@@ -808,8 +939,11 @@ class Engine:
         self._finalize_step(mode, pending, decode_ids, drafts)
         self._sample_peak()
         # wall time of this step feeds the controller's p90 tracker on the
-        # NEXT decision (measured-latency fallback to FP8, paper §3.2)
-        self._last_step_ms = (self.clock() - t0) * 1e3
+        # NEXT decision (measured-latency fallback to FP8, paper §3.2);
+        # injected stalls ride on top so the controller reacts to them
+        self.last_mode = mode
+        self.last_stall_ms, self.inject_stall_ms = self.inject_stall_ms, 0.0
+        self._last_step_ms = (self.clock() - t0) * 1e3 + self.last_stall_ms
         if self.debug_invariants:
             # outside the measured step window, so the controller's p90
             # and the bench rows stay honest under NFP_DEBUG=1

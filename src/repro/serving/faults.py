@@ -1,0 +1,183 @@
+"""Deterministic fault injection for multi-replica serving.
+
+A `FaultPlan` is an explicit, serializable list of `FaultEvent`s keyed
+by (router step, replica) — either hand-authored or drawn from a seeded
+RNG (`FaultPlan.seeded`), and always REPLAYABLE: the same plan against
+the same trace produces the same failure interleaving, which is what
+lets the router tests assert bit-exact failover against a no-fault run.
+
+Event kinds and where they land:
+
+* ``raise``   — the replica's next `Engine.step` raises `InjectedFault`
+  at the engine's containment point (top of `_step_inner`, before any
+  state mutates), modeling a crashed iteration.
+* ``stall``   — adds `arg` virtual milliseconds to the step
+  (`Engine.inject_stall_ms`): the engine folds it into its measured
+  step time (so the dual-precision controller reacts) and the router's
+  step-cost clock advances by it.
+* ``corrupt`` — flips one byte of a deterministically-chosen host-tier
+  entry, modeling spill-payload bit rot. The blake2b checksums recorded
+  at spill time (`HostPool.put`) catch it at match/restore time and the
+  engine falls back to recompute — counted, never a crash, never a
+  wrong token.
+* ``kill`` / ``revive`` — consumed by the Router itself: the replica is
+  removed from (returned to) service, with in-flight work drained and
+  failed over.
+
+The engine-side kinds execute through `FaultInjector.hook(replica)`,
+installed as `Engine.fault_hook` and armed with the current router step
+each iteration.
+"""
+
+from __future__ import annotations
+
+import collections
+import dataclasses
+
+import numpy as np
+
+
+class InjectedFault(RuntimeError):
+    """A deliberately-injected step failure (never a real defect)."""
+
+
+ENGINE_KINDS = ("raise", "stall", "corrupt")
+ROUTER_KINDS = ("kill", "revive")
+KINDS = ENGINE_KINDS + ROUTER_KINDS
+
+
+@dataclasses.dataclass(frozen=True, order=True)
+class FaultEvent:
+    step: int                # router step at which the event fires
+    replica: int
+    kind: str                # one of KINDS
+    arg: float = 0.0         # stall milliseconds (kind == "stall")
+
+    def __post_init__(self):
+        if self.kind not in KINDS:
+            raise ValueError(f"unknown fault kind {self.kind!r} "
+                             f"(expected one of {KINDS})")
+
+
+@dataclasses.dataclass
+class FaultPlan:
+    """An ordered, replayable fault schedule."""
+    events: list[FaultEvent] = dataclasses.field(default_factory=list)
+    seed: int = 0
+
+    def __post_init__(self):
+        self.events = sorted(self.events)
+
+    # -- serialization (replay a plan across processes) -----------------------
+    def to_dict(self) -> dict:
+        return {"seed": self.seed,
+                "events": [[e.step, e.replica, e.kind, e.arg]
+                           for e in self.events]}
+
+    @classmethod
+    def from_dict(cls, d: dict) -> "FaultPlan":
+        return cls(events=[FaultEvent(int(s), int(r), k, float(a))
+                           for s, r, k, a in d["events"]],
+                   seed=int(d["seed"]))
+
+    # -- seeded generation ----------------------------------------------------
+    @classmethod
+    def seeded(cls, seed: int, *, replicas: int, steps: int,
+               p_raise: float = 0.0, p_stall: float = 0.0,
+               p_corrupt: float = 0.0, p_kill: float = 0.0,
+               stall_ms: float = 50.0, revive_after: int | None = 10
+               ) -> "FaultPlan":
+        """Draw a random-but-deterministic plan. Replica/step order is
+        fixed, so the same seed always yields the same schedule. A kill
+        is only drawn while at least two replicas are alive (the
+        harness degrades the fleet, it never extinguishes it), and each
+        kill schedules a revive `revive_after` steps later unless
+        revives are disabled (None)."""
+        rng = np.random.RandomState(seed)
+        events: list[FaultEvent] = []
+        dead: dict[int, int | None] = {}     # rid -> revive step (or None)
+        for s in range(steps):
+            for rid, at in list(dead.items()):
+                if at is not None and at <= s:
+                    events.append(FaultEvent(s, rid, "revive"))
+                    del dead[rid]
+            for rid in range(replicas):
+                if rid in dead:
+                    continue
+                if p_kill and rng.rand() < p_kill \
+                        and replicas - len(dead) > 1:
+                    events.append(FaultEvent(s, rid, "kill"))
+                    dead[rid] = None if revive_after is None \
+                        else s + revive_after
+                    continue
+                if p_raise and rng.rand() < p_raise:
+                    events.append(FaultEvent(s, rid, "raise"))
+                if p_stall and rng.rand() < p_stall:
+                    events.append(FaultEvent(s, rid, "stall", stall_ms))
+                if p_corrupt and rng.rand() < p_corrupt:
+                    events.append(FaultEvent(s, rid, "corrupt"))
+        return cls(events=events, seed=seed)
+
+
+class FaultInjector:
+    """Executes a plan's ENGINE-side events through `Engine.fault_hook`.
+
+    The router arms the injector with the current router step, then
+    steps its replicas; each replica's hook fires the events scheduled
+    for (step, replica) exactly once. Within one step, stall/corrupt
+    execute before a raise (the raise aborts the engine step, it must
+    not swallow its co-scheduled events)."""
+
+    def __init__(self, plan: FaultPlan):
+        self.seed = plan.seed
+        self.step = 0
+        self.fired: list[FaultEvent] = []
+        self._queue: dict[tuple[int, int], list[FaultEvent]] = \
+            collections.defaultdict(list)
+        order = {"stall": 0, "corrupt": 1, "raise": 2}
+        for ev in plan.events:
+            if ev.kind in ENGINE_KINDS:
+                self._queue[(ev.step, ev.replica)].append(ev)
+        for q in self._queue.values():
+            q.sort(key=lambda e: order[e.kind])
+
+    def arm(self, step: int) -> None:
+        self.step = step
+
+    def hook(self, replica: int):
+        """The `Engine.fault_hook` callable for one replica."""
+        def _hook(engine) -> None:
+            for ev in self._queue.pop((self.step, replica), []):
+                self.fired.append(ev)
+                if ev.kind == "stall":
+                    engine.inject_stall_ms += ev.arg
+                elif ev.kind == "corrupt":
+                    self._corrupt(engine, ev)
+                else:
+                    raise InjectedFault(
+                        f"injected step failure @ step {ev.step} "
+                        f"replica {ev.replica}")
+        return _hook
+
+    def _corrupt(self, engine, ev: FaultEvent) -> None:
+        """Flip one byte of one host-tier entry, chosen by a
+        per-event-deterministic RNG (independent of how many entries
+        other replicas hold). No-op when the tier is empty."""
+        host = getattr(getattr(engine, "blocks", None), "host", None)
+        if host is None or not len(host.entries):
+            return
+        rng = np.random.RandomState(
+            (self.seed * 1_000_003 + ev.step * 1_009 + ev.replica * 101)
+            % (2 ** 31))
+        key = sorted(host.entries)[rng.randint(len(host.entries))]
+        planes = host.entries[key]
+        name = sorted(planes)[rng.randint(len(planes))]
+        arr = planes[name]
+        if not arr.flags.writeable:
+            # spill capture hands HostPool read-only device_get arrays;
+            # rot must land in the POOL's entry, so rebind a mutable copy
+            arr = arr.copy()
+            planes[name] = arr
+        buf = arr.view(np.uint8).reshape(-1)
+        if buf.size:
+            buf[rng.randint(buf.size)] ^= 0xFF

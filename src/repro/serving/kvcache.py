@@ -343,9 +343,12 @@ class HostPool:
         self.max_bytes = max_bytes
         self.bytes = 0
         self._pins: collections.Counter = collections.Counter()
+        self._sums: dict[tuple[int, int], bytes] = {}
+        self._corrupt: set[tuple[int, int]] = set()
         self.stats = {"spilled_blocks": 0, "spilled_bytes": 0,
                       "restored_blocks": 0, "restored_bytes": 0,
-                      "dropped_blocks": 0, "loaded_blocks": 0}
+                      "dropped_blocks": 0, "loaded_blocks": 0,
+                      "corrupt_blocks": 0}
 
     def __contains__(self, key: tuple[int, int]) -> bool:
         return key in self.entries
@@ -370,6 +373,16 @@ class HostPool:
     def pinned(self, key: tuple[int, int]) -> bool:
         return self._pins.get(key, 0) > 0
 
+    @staticmethod
+    def checksum(planes: dict[str, np.ndarray]) -> bytes:
+        """blake2b integrity digest over a block's plane bytes (names
+        sorted so the digest is layout-order independent)."""
+        h = hashlib.blake2b(digest_size=16)
+        for name in sorted(planes):
+            h.update(name.encode())
+            h.update(np.ascontiguousarray(planes[name]).tobytes())
+        return h.digest()
+
     def put(self, key: tuple[int, int], planes: dict[str, np.ndarray],
             loaded: bool = False) -> None:
         """Insert (or refresh) one block's bytes; `loaded` marks entries
@@ -377,6 +390,8 @@ class HostPool:
         if key in self.entries:
             self.bytes -= self.entry_bytes(self.entries.pop(key))
         self.entries[key] = planes
+        self._sums[key] = self.checksum(planes)
+        self._corrupt.discard(key)
         nb = self.entry_bytes(planes)
         self.bytes += nb
         if loaded:
@@ -390,6 +405,27 @@ class HostPool:
         self.entries.move_to_end(key)        # LRU touch
         return self.entries[key]
 
+    def verify(self, key: tuple[int, int]) -> bool:
+        """Re-derive the entry's checksum and compare with the one
+        recorded at `put`. A mismatch (bit rot, torn write, injected
+        corruption) is remembered and counted exactly once — callers
+        treat the entry as absent and fall back to recompute, never
+        restoring garbage KV."""
+        if key in self._corrupt:
+            return False
+        if self._sums.get(key) == self.checksum(self.entries[key]):
+            return True
+        self._corrupt.add(key)
+        self.stats["corrupt_blocks"] += 1
+        return False
+
+    def discard(self, key: tuple[int, int]) -> None:
+        """Drop one entry outright (corrupt payloads; must be unpinned)."""
+        assert not self.pinned(key), key
+        self.bytes -= self.entry_bytes(self.entries.pop(key))
+        self._sums.pop(key, None)
+        self._corrupt.discard(key)
+
     def _shrink(self) -> None:
         if self.max_bytes is None:
             return
@@ -399,6 +435,8 @@ class HostPool:
             if victim is None:
                 return                       # everything left is pinned
             self.bytes -= self.entry_bytes(self.entries.pop(victim))
+            self._sums.pop(victim, None)
+            self._corrupt.discard(victim)
             self.stats["dropped_blocks"] += 1
 
 
@@ -939,9 +977,15 @@ class BlockManager:
         host = self.host if allow_host else None
 
         def servable(gi: int, h: int) -> bool:
-            return (gi, h) in self._index or (
-                host is not None and ((gi, h) in host
-                                      or (gi, h) in self._spill_pending))
+            if (gi, h) in self._index:
+                return True
+            if host is None:
+                return False
+            # spill-pending hashes are still device bytes (captured
+            # before upload), so only true host entries need the
+            # integrity check
+            return ((gi, h) in self._spill_pending
+                    or self.host_ok(gi, h))
 
         hashes: list[int] = []
         parent = _ROOT_HASH
@@ -1162,6 +1206,38 @@ class BlockManager:
         if (g, h) in self.host and self.host.pinned((g, h)):
             self.host.unpin((g, h))
 
+    def host_ok(self, g: int, h: int) -> bool:
+        """Is host entry (g, h) present AND integrity-clean? A checksum
+        mismatch drops the entry (when unpinned; pinned copies are left
+        for the restore drain to handle) so later matches recompute
+        instead of restoring garbage."""
+        key = (g, h)
+        if self.host is None or key not in self.host:
+            return False
+        if self.host.verify(key):
+            return True
+        if not self.host.pinned(key):
+            self.host.discard(key)
+        return False
+
+    def rows_holding(self, g: int, b: int) -> list[int]:
+        """Slot indices whose block table references physical block
+        (g, b) — the owners a corrupt-restore fallback must preempt."""
+        return [idx for idx, s in enumerate(self.seqs)
+                if s is not None and b in s.groups[g].blocks]
+
+    def purge_block(self, g: int, b: int) -> None:
+        """Evict a zero-ref block outright — deregister its content and
+        return it to the free list (corrupt-fallback path: the block's
+        bytes must never be prefix-matched again)."""
+        assert self._ref[g][b] == 0, f"purge of live block {g}/{b}"
+        self._lru[g].pop(b, None)
+        h = self._hash_of.pop((g, b), None)
+        if h is not None:
+            del self._index[(g, h)]
+        if b not in self._free[g]:
+            self._free[g].append(b)
+
     def take_spills(self) -> list[tuple[int, int, int]]:
         """Drain the (group, block, hash) capture queue. The caller
         (engine `_flush_spills`) must gather + device_get these blocks'
@@ -1332,6 +1408,8 @@ class BlockManager:
                 (dict(want_pins), dict(self.host._pins))
             assert self.host.bytes == sum(
                 self.host.entry_bytes(p) for p in self.host.entries.values())
+            assert set(self.host._sums) == set(self.host.entries), \
+                "host checksum map out of sync with entries"
         if self._dev_tables is not None:
             # read-only check: overlay the pending dirty entries on the
             # mirror instead of flushing (device_tables() would mutate

@@ -68,7 +68,11 @@ def rate_stats(reqs: list[TraceRequest], duration_s: float) -> dict:
     for r in reqs:
         counts[min(int(r.arrival_s), nbins - 1)] += 1
     nz = counts[counts > 0]
+    # an EMPTY trace (every request shed, or a fault window with no
+    # arrivals) has no nonzero bucket: nz.min() would raise ValueError
+    # on the zero-size array — burstiness of nothing is 0, not a crash
+    burstiness = float(counts.max() / max(nz.min(), 1.0)) if nz.size else 0.0
     return {"mean_rate": float(counts.mean()),
             "max_rate": float(counts.max()),
             "min_rate": float(counts.min()),
-            "burstiness": float(counts.max() / max(nz.min(), 1.0))}
+            "burstiness": burstiness}

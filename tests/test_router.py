@@ -1,0 +1,560 @@
+"""Fault-tolerant multi-replica router (`serving/router.py`) +
+deterministic fault injection (`serving/faults.py`).
+
+Two tiers of coverage:
+
+* **Stub-engine tests** exercise the router's own machinery — health
+  state transitions, rendezvous placement, degrade policy application,
+  drain-failure rebuild, conservation accounting, virtual-clock cost
+  modeling — with a minimal engine double, so they run in milliseconds
+  and can sweep many schedules.
+* **Real-engine tests** prove the paper-level guarantees end to end:
+  a seeded replica kill mid-generation completes every in-flight
+  request BIT-IDENTICAL to a no-fault run (the engine's recompute
+  replay invariant carried across replicas), and a corrupted host-tier
+  spill is caught by its blake2b checksum and recomputed — counted,
+  never a crash, never a wrong token.
+"""
+
+import numpy as np
+import jax
+import pytest
+
+from repro.configs import ARCHS
+from repro.core.policy import DegradePolicy, RestorePolicy
+from repro.models import model as M
+from repro.models.convert import to_serving
+from repro.serving import trace
+from repro.serving.engine import Engine, Request
+from repro.serving.faults import (FaultEvent, FaultInjector, FaultPlan,
+                                  InjectedFault)
+from repro.serving.router import (DEAD, DEGRADED, HEALTHY, RECOVERING,
+                                  Router, StepCostModel, VirtualClock)
+
+
+# =============================================================================
+# stub engine: the minimal surface the router drives
+# =============================================================================
+
+class StubEngine:
+    """One emitted token per active request per step; no KV, no jax."""
+
+    def __init__(self):
+        self.queue: list[Request] = []
+        self.active: dict[str, Request] = {}
+        self.prefilling: list = []
+        self.finished: list[Request] = []
+        self.stats = {"decode_tokens": 0, "chunk_tokens": 0}
+        self.forced_mode = "fp16"
+        self.restore_policy = RestorePolicy()
+        self.fault_hook = None
+        self.last_mode = "fp16"
+        self.last_stall_ms = 0.0
+        self.inject_stall_ms = 0.0
+        self.blocks = None               # no KV tier: failover recomputes
+
+    def submit(self, req: Request) -> None:
+        if not req.tokens:
+            raise ValueError("empty prompt")
+        self.queue.append(req)
+
+    def step(self) -> None:
+        if self.fault_hook is not None:
+            self.fault_hook(self)        # containment point, like Engine
+        while self.queue:
+            r = self.queue.pop(0)
+            self.active[r.request_id] = r
+        for r in list(self.active.values()):
+            r.output.append(len(r.output))
+            self.stats["decode_tokens"] += 1
+            if len(r.output) >= r.max_new:
+                del self.active[r.request_id]
+                self.finished.append(r)
+        self.last_mode = self.forced_mode or "fp16"
+        self.last_stall_ms, self.inject_stall_ms = self.inject_stall_ms, 0.0
+
+    def drain_requests(self) -> list[Request]:
+        out = list(self.active.values()) + self.queue
+        self.active.clear()
+        self.queue.clear()
+        return out
+
+
+class BrokenDrainEngine(StubEngine):
+    """Drain raises too — forces the registry-recovery + rebuild path."""
+
+    def drain_requests(self):
+        raise RuntimeError("engine state is toast")
+
+
+def _req(rid, toks, max_new=4):
+    return Request(str(rid), list(toks), max_new)
+
+
+def _stub_router(n=2, **kw):
+    return Router([StubEngine() for _ in range(n)], **kw)
+
+
+# =============================================================================
+# health state machine
+# =============================================================================
+
+class TestHealthStates:
+    def test_raise_degrades_then_consecutive_raises_kill(self):
+        plan = FaultPlan([FaultEvent(0, 0, "raise"),
+                          FaultEvent(1, 0, "raise")])
+        r = _stub_router(1, plan=plan, dead_after_errors=2)
+        r.submit(_req("a", [1, 2, 3]))
+        r.step()                         # raise #1: degraded, self-requeued
+        assert r.replicas[0].state == DEGRADED
+        assert r.stats()["lost"] == 0
+        r.step()                         # raise #2: dead, work orphaned
+        assert r.replicas[0].state == DEAD
+        st = r.stats()
+        assert st["step_errors"] == 2 and st["lost"] == 0
+        assert st["in_flight"] == 1      # orphaned, not lost
+
+    def test_success_resets_error_count(self):
+        plan = FaultPlan([FaultEvent(0, 0, "raise"),
+                          FaultEvent(2, 0, "raise")])
+        r = _stub_router(1, plan=plan, dead_after_errors=2, heal_steps=50)
+        r.submit(_req("a", [1, 2, 3], max_new=16))
+        for _ in range(4):
+            r.step()
+        # non-consecutive raises never reach the dead threshold
+        assert r.replicas[0].state == DEGRADED
+        assert r.stats()["step_errors"] == 2
+
+    def test_degraded_heals_after_clean_steps(self):
+        plan = FaultPlan([FaultEvent(0, 0, "raise")])
+        r = _stub_router(1, plan=plan, heal_steps=3)
+        r.submit(_req("a", [1, 2, 3], max_new=12))
+        r.step()
+        assert r.replicas[0].state == DEGRADED
+        for _ in range(3):
+            r.step()
+        assert r.replicas[0].state == HEALTHY
+
+    def test_kill_revive_recovering_then_healthy(self):
+        plan = FaultPlan([FaultEvent(1, 0, "kill"),
+                          FaultEvent(3, 0, "revive")])
+        r = _stub_router(1, plan=plan, recover_probe_steps=2)
+        r.submit(_req("a", [1, 2, 3], max_new=8))
+        r.step()
+        r.step()                         # kill fires: work orphaned
+        assert r.replicas[0].state == DEAD
+        assert not r.replicas[0].serving
+        r.step()                         # dead fleet idles
+        r.step()                         # revive: recovering + re-homed
+        assert r.replicas[0].state == RECOVERING
+        for _ in range(12):
+            r.step()
+        st = r.stats()
+        assert r.replicas[0].state == HEALTHY
+        assert st["completed"] == 1 and st["lost"] == 0
+        assert st["kills"] == 1 and st["revives"] == 1
+        out = r.finished[0].output
+        assert out == list(range(len(out)))   # replayed, no gap/dup
+
+    def test_drain_failure_rebuilds_from_factory(self):
+        eng = BrokenDrainEngine()
+        r = Router([eng], factories=[StubEngine],
+                   plan=FaultPlan([FaultEvent(0, 0, "raise")]))
+        r.submit(_req("a", [1, 2, 3]))
+        r.step()                         # raise, then drain blows up too
+        assert r.replicas[0].engine is not eng      # rebuilt
+        assert r.stats()["rebuilds"] == 1
+        r.run()
+        assert r.stats()["completed"] == 1 and r.stats()["lost"] == 0
+
+    def test_drain_failure_without_factory_is_terminal(self):
+        r = Router([BrokenDrainEngine()],
+                   plan=FaultPlan([FaultEvent(0, 0, "raise"),
+                                   FaultEvent(2, 0, "revive")]))
+        r.submit(_req("a", [1, 2, 3]))
+        for _ in range(4):
+            r.step()
+        rep = r.replicas[0]
+        assert rep.state == DEAD and not rep.usable   # revive refused
+        assert r.stats()["lost"] == 0                 # orphaned, accounted
+
+
+# =============================================================================
+# placement: rendezvous affinity + least-loaded fallback
+# =============================================================================
+
+class TestPlacement:
+    def test_same_prefix_same_replica(self):
+        r = _stub_router(4)
+        toks = list(range(40))
+        picks = {r._place(toks).rid for _ in range(5)}
+        assert len(picks) == 1
+
+    def test_rendezvous_kill_only_rehomes_dead_keys(self):
+        r = _stub_router(4)
+        rng = np.random.RandomState(0)
+        prompts = [rng.randint(1, 1000, size=24).tolist() for _ in range(40)]
+        before = {i: r._place(p).rid for i, p in enumerate(prompts)}
+        dead = before[0]
+        survivors = [rep for rep in r.replicas if rep.rid != dead]
+        moved = sum(1 for i, p in enumerate(prompts)
+                    if r._place(p, among=survivors).rid != before[i])
+        lost_keys = sum(1 for v in before.values() if v == dead)
+        assert moved == lost_keys        # only the dead replica's keys move
+
+    def test_least_loaded_override_beyond_slack(self):
+        r = _stub_router(2, balance_slack_tokens=10)
+        toks = list(range(32))
+        primary = r._place(toks)
+        # load the affinity target far past the slack
+        heavy = _req("h", [9] * 8, max_new=100)
+        r._live[primary.rid][heavy.request_id] = heavy
+        assert r._place(toks).rid != primary.rid
+
+    def test_submit_with_no_serving_replicas_raises(self):
+        r = _stub_router(1, plan=FaultPlan([FaultEvent(0, 0, "kill")]))
+        r.step()
+        with pytest.raises(RuntimeError, match="no serving replicas"):
+            r.submit(_req("a", [1]))
+
+
+# =============================================================================
+# degrade policy application
+# =============================================================================
+
+class TestDegrade:
+    def test_kill_pins_survivors_fp8_and_tightens_restores(self):
+        pol = DegradePolicy(force_fp8=True, restore_scale=0.5,
+                            hysteresis_steps=2)
+        plan = FaultPlan([FaultEvent(1, 0, "kill"),
+                          FaultEvent(4, 0, "revive")])
+        r = _stub_router(2, policy=pol, plan=plan)
+        base = r.replicas[1].engine.restore_policy
+        for i in range(2):
+            r.submit(_req(f"a{i}", [7, i], max_new=30))
+        r.step()
+        r.step()                         # kill fired; decision active
+        surv = r.replicas[1].engine
+        assert surv.forced_mode == "fp8"
+        assert surv.restore_policy.max_restore_bytes_per_step \
+            == max(1, base.max_restore_bytes_per_step // 2)
+        assert r.stats()["degrade_active"]
+        assert r.stats()["fp8_dwell"][1] > 0
+        # revive at 4: hysteresis dwells 2 more decisions, THEN fp16
+        r.step()
+        r.step()
+        assert surv.forced_mode == "fp8"     # still dwelling
+        r.step()
+        r.step()
+        assert surv.forced_mode == "fp16"    # re-probed after dwell
+        assert surv.restore_policy is base   # grants restored
+        assert not r.stats()["degrade_active"]
+
+    def test_shed_beyond_budget_is_explicit_and_conserved(self):
+        pol = DegradePolicy(shed_budget_tokens=20, hysteresis_steps=2)
+        plan = FaultPlan([FaultEvent(0, 0, "kill")])
+        r = _stub_router(2, policy=pol, plan=plan)
+        assert r.submit(_req("pre", [1, 2], max_new=10))
+        r.step()                         # kill: degrade activates
+        # survivor owes ~12 tokens; this request's 2+30 blows the budget
+        assert r.submit(_req("big", [3, 4], max_new=30)) is False
+        st = r.stats()
+        assert st["shed"] == 1 and st["lost"] == 0
+        assert sum(st["shed_by_replica"].values()) == 1
+        assert [q.request_id for q in r.shed_requests] == ["big"]
+        r.run()
+        st = r.stats()
+        assert st["submitted"] == st["completed"] + st["shed"]
+
+    def test_failover_resubmission_bypasses_shed(self):
+        # already-admitted work is NEVER shed, however tight the budget
+        pol = DegradePolicy(shed_budget_tokens=1, hysteresis_steps=2)
+        plan = FaultPlan([FaultEvent(1, 0, "kill")])
+        r = _stub_router(2, policy=pol, plan=plan)
+        for i in range(4):
+            r.submit(_req(f"a{i}", [5, i], max_new=8))
+        r.run()
+        st = r.stats()
+        assert st["completed"] == 4 and st["shed"] == 0 and st["lost"] == 0
+
+    def test_policy_decide_dwell(self):
+        pol = DegradePolicy(hysteresis_steps=3)
+        assert not pol.decide(2, 2).active
+        assert pol.decide(1, 2).active           # activation is immediate
+        out = [pol.decide(2, 2).active for _ in range(4)]
+        assert out == [True, True, False, False]  # releases after dwell
+
+
+# =============================================================================
+# fault plans: determinism + serialization
+# =============================================================================
+
+class TestFaultPlan:
+    def test_seeded_replayable_and_seed_sensitive(self):
+        mk = lambda s: FaultPlan.seeded(s, replicas=3, steps=40, p_raise=.1,
+                                        p_stall=.1, p_corrupt=.1, p_kill=.05)
+        assert mk(7).events == mk(7).events
+        assert mk(7).events != mk(8).events
+
+    def test_seeded_never_extinguishes_fleet(self):
+        for seed in range(10):
+            plan = FaultPlan.seeded(seed, replicas=2, steps=60, p_kill=0.5,
+                                    revive_after=5)
+            dead = set()
+            by_step = {}
+            for ev in plan.events:
+                by_step.setdefault(ev.step, []).append(ev)
+            for s in sorted(by_step):    # revives fire before kills
+                for ev in sorted(by_step[s], key=lambda e: e.kind != "revive"):
+                    if ev.kind == "kill":
+                        dead.add(ev.replica)
+                    elif ev.kind == "revive":
+                        dead.discard(ev.replica)
+                    assert len(dead) < 2
+
+    def test_dict_round_trip(self):
+        plan = FaultPlan.seeded(3, replicas=2, steps=20, p_raise=.2,
+                                p_stall=.2, p_kill=.1)
+        assert FaultPlan.from_dict(plan.to_dict()).events == plan.events
+
+    def test_unknown_kind_rejected(self):
+        with pytest.raises(ValueError, match="unknown fault kind"):
+            FaultEvent(0, 0, "meteor")
+
+    def test_injector_fires_each_event_once(self):
+        plan = FaultPlan([FaultEvent(0, 0, "stall", 25.0)])
+        inj = FaultInjector(plan)
+        eng = StubEngine()
+        hook = inj.hook(0)
+        inj.arm(0)
+        hook(eng)
+        hook(eng)                        # second call: already consumed
+        assert eng.inject_stall_ms == 25.0
+        assert len(inj.fired) == 1
+
+    def test_raise_kind_raises_injected_fault(self):
+        inj = FaultInjector(FaultPlan([FaultEvent(0, 1, "raise")]))
+        inj.arm(0)
+        with pytest.raises(InjectedFault):
+            inj.hook(1)(StubEngine())
+
+
+# =============================================================================
+# virtual clock + step cost model
+# =============================================================================
+
+class TestVirtualClock:
+    def test_deterministic_trajectory(self):
+        def drive(plan):
+            vc = VirtualClock()
+            r = _stub_router(2, plan=plan, clock=vc,
+                             cost_model=StepCostModel())
+            for i in range(3):
+                r.submit(_req(f"a{i}", [1, i], max_new=6))
+            r.run()
+            return vc.now
+        assert drive(None) == drive(None)
+
+    def test_stall_advances_clock_and_is_counted(self):
+        plan = FaultPlan([FaultEvent(0, 0, "stall", 40.0)])
+        base = VirtualClock()
+        rb = _stub_router(1, clock=base, cost_model=StepCostModel())
+        rb.submit(_req("a", [1, 2], max_new=4))
+        rb.run()
+        stalled = VirtualClock()
+        rs = _stub_router(1, plan=plan, clock=stalled,
+                          cost_model=StepCostModel())
+        rs.submit(_req("a", [1, 2], max_new=4))
+        rs.run()
+        assert stalled.now == pytest.approx(base.now + 0.040)
+        assert rs.stats()["stall_ms"] == 40.0
+
+    def test_fp8_steps_cost_less(self):
+        m = StepCostModel()
+        assert m.step_ms("fp8", 10) < m.step_ms("fp16", 10)
+        # prefill-chunk tokens ride the cheaper compute-bound rate
+        assert m.step_ms("fp16", 0, 10) < m.step_ms("fp16", 10, 0)
+
+
+# =============================================================================
+# trace regression (satellite: empty-trace rate_stats)
+# =============================================================================
+
+class TestRateStatsEmpty:
+    def test_empty_trace_does_not_crash(self):
+        s = trace.rate_stats([], duration_s=10.0)
+        assert s == {"mean_rate": 0.0, "max_rate": 0.0,
+                     "min_rate": 0.0, "burstiness": 0.0}
+
+
+# =============================================================================
+# real engines: bit-exact failover, checksummed corruption fallback
+# =============================================================================
+
+@pytest.fixture(scope="module")
+def tiny():
+    cfg = ARCHS["qwen1.5-0.5b"].reduced()
+    params = M.init_params(jax.random.PRNGKey(0), cfg)
+    return cfg, to_serving(params)
+
+
+def _mk(tiny, **kw):
+    cfg, params = tiny
+    kw.setdefault("n_slots", 4)
+    kw.setdefault("capacity", 128)
+    kw.setdefault("forced_mode", "fp16")
+    kw.setdefault("block_size", 16)
+    kw.setdefault("n_blocks", 24)
+    kw.setdefault("chunk_tokens", 64)
+    kw.setdefault("debug_invariants", True)
+    return Engine(cfg, params, **kw)
+
+
+def _shared_burst(cfg, n=5, max_new=16):
+    rng = np.random.default_rng(3)
+    sysp = rng.integers(1, cfg.vocab_size, size=32).tolist()
+    return [Request(f"r{i}",
+                    sysp + np.random.default_rng(11 * i + 1)
+                    .integers(1, cfg.vocab_size, size=6).tolist(), max_new)
+            for i in range(n)]
+
+
+def _serve(router, reqs):
+    for q in reqs:
+        router.submit(q)
+    router.run()
+    return {q.request_id: tuple(q.output) for q in router.finished}
+
+
+class TestEngineSubmitValidation:
+    """Satellite: malformed requests fail at submit with clear errors,
+    not steps later as scheduling failures."""
+
+    def test_empty_prompt(self, tiny):
+        with pytest.raises(ValueError, match="empty prompt"):
+            _mk(tiny).submit(Request("e", [], 4))
+
+    def test_nonpositive_max_new(self, tiny):
+        with pytest.raises(ValueError, match="max_new=0 must be positive"):
+            _mk(tiny).submit(Request("z", [1, 2], 0))
+        with pytest.raises(ValueError, match="must be positive"):
+            _mk(tiny).submit(Request("n", [1, 2], -3))
+
+    def test_exceeds_capacity(self, tiny):
+        e = _mk(tiny, capacity=64)
+        with pytest.raises(ValueError, match="exceeds per-sequence capacity"):
+            e.submit(Request("big", [1] * 60, 8))
+
+    def test_exceeds_whole_pool(self, tiny):
+        # fits per-sequence capacity, but needs more blocks than the
+        # whole pool holds: no amount of preemption can ever cover it
+        e = _mk(tiny, capacity=128, n_blocks=4)
+        with pytest.raises(ValueError, match="whole group pool"):
+            e.submit(Request("pool", [1] * 100, 20))
+
+
+class TestFailoverBitExact:
+    def test_kill_mid_generation_is_bit_exact(self, tiny):
+        cfg, _ = tiny
+        # slack small enough that the shared-prefix burst spreads over
+        # BOTH replicas: the survivor is warm when the failover arrives
+        baseline = _serve(
+            Router([_mk(tiny), _mk(tiny)], affinity_blocks=1,
+                   balance_slack_tokens=60),
+            _shared_burst(cfg))
+        plan = FaultPlan([FaultEvent(4, 0, "kill")])
+        r = Router([_mk(tiny), _mk(tiny)], plan=plan, affinity_blocks=1,
+                   balance_slack_tokens=60)
+        faulted = _serve(r, _shared_burst(cfg))
+        st = r.stats()
+        assert st["kills"] == 1 and st["lost"] == 0
+        assert st["replicas"][0] == DEAD
+        assert st["failover_requests"] > 0
+        # the survivor's warm prefix cache serves part of the replayed
+        # streams; the rest is recomputed — both paths are counted and
+        # both land on the same tokens
+        assert st["failover_restored_tokens"] > 0
+        assert st["failover_recomputed_tokens"] > 0
+        assert faulted == baseline       # bit-identical continuation
+
+    def test_step_raise_failover_is_bit_exact(self, tiny):
+        cfg, _ = tiny
+        baseline = _serve(
+            Router([_mk(tiny), _mk(tiny)], affinity_blocks=1,
+                   balance_slack_tokens=60),
+            _shared_burst(cfg, n=4, max_new=10))
+        plan = FaultPlan([FaultEvent(3, 1, "raise")])
+        r = Router([_mk(tiny), _mk(tiny)], plan=plan, affinity_blocks=1,
+                   balance_slack_tokens=60)
+        faulted = _serve(r, _shared_burst(cfg, n=4, max_new=10))
+        st = r.stats()
+        assert st["step_errors"] == 1 and st["lost"] == 0
+        assert st["replicas"][1] in (DEGRADED, HEALTHY)
+        assert faulted == baseline
+
+
+class TestCorruptionFallback:
+    def test_corrupt_host_entry_detected_and_recomputed(self, tiny):
+        cfg, _ = tiny
+
+        def serve_phases(corrupt):
+            # scarce pool: burst B evicts burst A's prefix blocks into
+            # the host tier, so a third burst sharing A's prefix goes
+            # through host restore — the corruption target
+            eng = _mk(tiny, n_slots=2, n_blocks=8, capacity=128)
+            r1 = Router([eng], affinity_blocks=1)
+            _serve(r1, _shared_burst(cfg, n=2, max_new=6))
+            rng = np.random.default_rng(99)
+            other = rng.integers(1, cfg.vocab_size, size=100).tolist()
+            _serve(r1, [Request("evict", other, 6)])
+            assert len(eng.blocks.host.entries) > 0   # A spilled to host
+            plan = FaultPlan([FaultEvent(0, 0, "corrupt")]) \
+                if corrupt else None
+            r2 = Router([eng], plan=plan, affinity_blocks=1)
+            r2.replicas[0].fin_cursor = len(eng.finished)
+            burst = [Request(f"again{i}", q.tokens, 6)
+                     for i, q in enumerate(_shared_burst(cfg, n=2,
+                                                         max_new=6))]
+            out = _serve(r2, burst)
+            return out, r2.stats()
+
+        ref, ref_st = serve_phases(corrupt=False)
+        hit, hit_st = serve_phases(corrupt=True)
+        assert ref_st["corrupt_detected"] == 0
+        assert hit_st["corrupt_detected"] > 0    # checksum caught the flip
+        assert hit_st["lost"] == 0
+        assert hit == ref                        # recomputed, never wrong
+
+
+class TestRouterBuild:
+    def test_build_replicas_with_factories(self, tiny):
+        cfg, params = tiny
+        r = Router.build(cfg, params, 2,
+                         engine_kwargs=dict(n_slots=2, capacity=64,
+                                            forced_mode="fp16",
+                                            block_size=16, n_blocks=11,
+                                            chunk_tokens=32))
+        assert len(r.replicas) == 2
+        assert all(rep.factory is not None for rep in r.replicas)
+        out = _serve(r, _shared_burst(cfg, n=2, max_new=4))
+        assert len(out) == 2 and r.stats()["lost"] == 0
+
+    @pytest.mark.skipif(len(jax.devices()) < 4,
+                        reason="needs 4 devices (chaos/mesh lane forces "
+                               "--xla_force_host_platform_device_count=4)")
+    def test_replica_mesh_slices_failover(self, tiny):
+        from repro.launch.mesh import make_replica_meshes
+        cfg, params = tiny
+        meshes = make_replica_meshes(2, 2)
+        assert not (set(meshes[0].devices.flat)
+                    & set(meshes[1].devices.flat))
+        plan = FaultPlan([FaultEvent(3, 0, "kill")])
+        r = Router.build(cfg, params, 2, meshes=meshes, plan=plan,
+                         affinity_blocks=1,
+                         engine_kwargs=dict(n_slots=2, capacity=64,
+                                            forced_mode="fp16",
+                                            block_size=16, n_blocks=11,
+                                            chunk_tokens=32))
+        out = _serve(r, _shared_burst(cfg, n=3, max_new=8))
+        st = r.stats()
+        assert len(out) == 3 and st["lost"] == 0 and st["kills"] == 1
